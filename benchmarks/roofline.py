@@ -1,0 +1,124 @@
+"""Roofline table: aggregates the dry-run JSONs into EXPERIMENTS.md §Roofline.
+
+Per (arch x shape x mesh): the three roofline terms (seconds), the dominant
+bottleneck, MODEL_FLOPS / HLO_FLOPs (useful-compute ratio), memory fit, and
+a what-would-move-it note derived from the dominant term.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.core import report
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+NOTES = {
+    "compute": "raise per-chip math utilization: larger per-device tiles "
+               "(less model parallelism), fuse attention (Pallas), bf16 accums",
+    "memory": "cut HBM traffic: fuse norms/elementwise into matmuls, remat "
+              "less aggressively, keep fp32 accumulators out of HBM",
+    "collective": "re-shard to cheaper collectives: reduce-scatter gradient "
+                  "accumulation, fewer weight all-gathers (2D sharding), "
+                  "overlap collectives with compute",
+}
+
+
+def load_cells(mesh: str = None) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if mesh and cell.get("mesh") != mesh:
+            continue
+        cells.append(cell)
+    return cells
+
+
+PEAK_FLOPS = 197e12
+
+
+def _fix_multipod_flops(c: Dict) -> Dict:
+    """Multi-pod cells skip the unrolled lowering; global FLOPs are mesh-
+    independent, so take them from the single-pod twin and recompute the
+    compute term / useful ratio."""
+    if c.get("mesh") != "2x16x16" or c.get("status") != "ok":
+        return c
+    if c["cost"].get("flops_unrolled_global"):
+        return c
+    twin = os.path.join(RESULTS_DIR, f"{c['arch']}__{c['shape']}__16x16.json")
+    if not os.path.exists(twin):
+        return c
+    with open(twin) as f:
+        t = json.load(f)
+    if t.get("status") != "ok":
+        return c
+    fg = t["cost"]["flops_global"]
+    c["cost"]["flops_global"] = fg
+    c["roofline"]["compute_term_s"] = fg / (c["chips"] * PEAK_FLOPS)
+    c["roofline"]["useful_flops_ratio"] = t["roofline"]["model_flops"] / max(fg, 1.0)
+    terms = {"compute": c["roofline"]["compute_term_s"],
+             "memory": c["roofline"]["memory_term_s"],
+             "collective": c["roofline"]["collective_term_s"]}
+    c["roofline"]["dominant"] = max(terms, key=terms.get)
+    return c
+
+
+def rows_for(cells: List[Dict]) -> List[Dict]:
+    rows = []
+    for c in cells:
+        c = _fix_multipod_flops(c)
+        if c.get("status") == "skipped":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "mesh": c.get("mesh", "?"), "status": "skip",
+                         "note": c["reason"][:60]})
+            continue
+        if c.get("status") != "ok":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "mesh": c.get("mesh", "?"), "status": "ERROR"})
+            continue
+        r = c["roofline"]
+        m = c["memory"]
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "status": "ok",
+            "compute_ms": round(r["compute_term_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_term_s"] * 1e3, 2),
+            "coll_ms": round(r["collective_term_s"] * 1e3, 2),
+            "bound": r["dominant"],
+            "useful": round(r["useful_flops_ratio"], 2),
+            "GB/dev": round(m["peak_bytes_estimate"] / 1e9, 1),
+            "note": NOTES.get(r["dominant"], "")[:46],
+        })
+    return rows
+
+
+def run(csv_rows: List[str]) -> str:
+    lines = []
+    for mesh in ("16x16", "2x16x16"):
+        cells = load_cells(mesh)
+        if not cells:
+            continue
+        lines.append(f"## Roofline — mesh {mesh} "
+                     f"({'single pod' if mesh == '16x16' else '2 pods'})")
+        rows = rows_for(cells)
+        lines.append(report.to_markdown(rows))
+        ok = [r for r in rows if r["status"] == "ok"]
+        for r in ok:
+            dom = {"compute": r["compute_ms"], "memory": r["memory_ms"],
+                   "collective": r["coll_ms"]}[r["bound"]]
+            csv_rows.append(
+                f"roofline_{r['arch']}_{r['shape']}_{mesh},{dom*1e3:.0f},"
+                f"bound={r['bound']};useful={r['useful']}")
+        lines.append(f"\ncells ok: {len(ok)}, skipped: "
+                     f"{sum(1 for r in rows if r['status'] == 'skip')}, "
+                     f"errors: {sum(1 for r in rows if r['status'] == 'ERROR')}\n")
+    return "\n".join(lines) if lines else "(no dryrun results yet)"
+
+
+if __name__ == "__main__":
+    csv: List[str] = []
+    print(run(csv))

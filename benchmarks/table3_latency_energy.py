@@ -1,0 +1,63 @@
+"""Paper Table 3 reproduction: latency + energy on A6000 (estimator mode).
+
+The dev container has no A6000, so this is the analytic roofline+power model
+(core/estimator.py) validated cell-by-cell against the published numbers.
+The multi-GPU rows are also produced under the ``naive_pp`` mode (HF
+accelerate-style sequential layer placement), which is what the paper's
+summed-power numbers are consistent with (see EXPERIMENTS §Paper-validation).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import report
+from repro.core.profiler import Elana
+
+PAPER_1GPU = {  # nGPU=1, bsize=1, L=512+512
+    "llama3.1-8b": (94.30, 25.91, 24.84, 6.80, 12859.85, 3533.09),
+    "qwen2.5-7b": (88.41, 24.29, 23.15, 6.44, 12073.26, 3343.91),
+    "nemotron-h-8b": (87.72, 24.00, 24.33, 6.67, 12593.76, 3437.56),
+}
+COLS = ("TTFT(ms)", "J/Prom.", "TPOT(ms)", "J/Tok.", "TTLT(ms)", "J/Req.")
+
+
+def run(csv_rows: List[str]) -> str:
+    lines = ["## Table 3: A6000, nGPU=1, bsize=1, L=512+512 (estimator vs paper)"]
+    rows = []
+    for arch, exp in PAPER_1GPU.items():
+        t0 = time.perf_counter()
+        est = Elana(arch).estimate(hardware="a6000", batch=1,
+                                   prompt_len=512, gen_len=512)
+        r = est.row()
+        ours = (r["TTFT_ms"], r["J_per_prompt"], r["TPOT_ms"],
+                r["J_per_token"], r["TTLT_ms"], r["J_per_request"])
+        rels = [abs(o - p) / p for o, p in zip(ours, exp)]
+        row = {"Model": arch}
+        for c, o, p in zip(COLS, ours, exp):
+            row[c] = round(o, 2)
+            row["p" + c] = p
+        row["max_rel%"] = round(max(rels) * 100, 1)
+        rows.append(row)
+        dt = (time.perf_counter() - t0) * 1e6
+        csv_rows.append(
+            f"table3_{arch},{dt:.0f},"
+            f"tpot_relerr={rels[2]:.3f};jtok_relerr={rels[3]:.3f}")
+    lines.append(report.to_markdown(rows))
+
+    lines.append("\n## Table 3 multi-GPU rows (nGPU=4, bsize=64, naive_pp mode)")
+    rows = []
+    for arch in PAPER_1GPU:
+        est = Elana(arch).estimate(hardware="a6000", n_devices=4,
+                                   mode="naive_pp", batch=64,
+                                   prompt_len=512, gen_len=512)
+        rows.append(est.row())
+    lines.append(report.to_markdown(rows, floatfmt=".1f"))
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    csv: List[str] = []
+    print(run(csv))
+    print("\n".join(csv))

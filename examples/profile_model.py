@@ -1,0 +1,56 @@
+"""Full profiling session (paper §2 end-to-end), including the custom-model
+hook — the JAX analogue of overriding ``_build_model_and_tokenizer``.
+
+    PYTHONPATH=src python examples/profile_model.py [--arch qwen1.5-0.5b]
+"""
+
+import argparse
+import json
+
+import jax
+
+from repro.core import energy as energy_lib
+from repro.core.profiler import Elana
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=8)
+    args = ap.parse_args()
+
+    # ---- option A: registry model --------------------------------------
+    e = Elana(args.arch, smoke=True)
+
+    # ---- option B: your own model, ELANA unchanged ----------------------
+    # from repro.models import model as model_lib
+    # def builder():
+    #     cfg = my_custom_config()                 # any ModelConfig
+    #     params = my_load_quantized_weights(cfg)  # e.g. compressed models
+    #     return cfg, params
+    # e = Elana(builder=builder)
+
+    print("== size =="); print(e.size_report().fmt())
+    print("\n== cache =="); print(e.cache_report(2, 256).fmt("MB"))
+
+    print("\n== measured latency + energy (10 Hz ProcStat sampler) ==")
+    m = e.measure(batch=1, prompt_len=args.prompt_len, gen_len=args.gen_len,
+                  iters=3, power_reader=energy_lib.ProcStatReader())
+    print(json.dumps(m, indent=2))
+
+    print("\n== estimated on the paper's platforms ==")
+    for hw in ("a6000", "jetson-agx-thor", "jetson-orin-nano", "tpu-v5e"):
+        full = Elana(args.arch)  # full config for the estimator
+        est = full.estimate(hardware=hw, batch=1, prompt_len=512, gen_len=512)
+        print(f"{hw:18s} TTFT {est.ttft.latency_s*1e3:8.1f} ms  "
+              f"TPOT {est.tpot.latency_s*1e3:7.2f} ms  "
+              f"J/Tok {est.tpot.joules:6.2f}  [{est.tpot.bound}]")
+
+    path = f"trace_{args.arch.replace('.', '_')}.json"
+    s = Elana(args.arch).trace(path, phase="decode", seq_len=1024)
+    print(f"\nwrote {path} — {json.dumps(s, indent=2)}")
+
+
+if __name__ == "__main__":
+    main()

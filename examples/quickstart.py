@@ -1,0 +1,38 @@
+"""Quickstart: the ELANA workflow in ten lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core.profiler import Elana
+
+# Any registered architecture (see `elana archs`); full config = analytic
+# profiling only, no weights are materialized.
+e = Elana("llama3.1-8b")
+
+print(e.size_report().fmt())                       # §2.2 model size
+print()
+print(e.cache_report(batch=128, seq_len=2048).fmt())  # §2.2 KV cache
+print()
+
+# §2.3/2.4 estimator mode: latency + energy on a target platform
+est = e.estimate(hardware="a6000", batch=1, prompt_len=512, gen_len=512)
+print(f"A6000 bsize=1 L=512+512:  TTFT {est.ttft.latency_s*1e3:.1f} ms "
+      f"({est.ttft.joules:.1f} J)  TPOT {est.tpot.latency_s*1e3:.2f} ms "
+      f"({est.tpot.joules:.2f} J/tok)  [{est.tpot.bound}-bound]")
+
+est = e.estimate(hardware="tpu-v5e", n_devices=16, batch=8,
+                 prompt_len=2048, gen_len=512)
+print(f"TPU v5e x16 bsize=8:      TTFT {est.ttft.latency_s*1e3:.1f} ms   "
+      f"TPOT {est.tpot.latency_s*1e3:.2f} ms  [{est.tpot.bound}-bound]")
+
+# §2.5 kernel-level timeline for Perfetto
+summary = e.trace("quickstart_trace.json", hardware="tpu-v5e", phase="decode",
+                  seq_len=2048)
+print(f"\nwrote quickstart_trace.json (open at https://ui.perfetto.dev) — "
+      f"{summary['memory_bound_frac']*100:.0f}% of decode time is memory-bound")
+
+# Measured mode runs real wall-clock on whatever backend exists — use the
+# reduced config on this CPU rig:
+m = Elana("qwen1.5-0.5b", smoke=True).measure(batch=1, prompt_len=32, gen_len=8)
+print(f"\nmeasured (reduced qwen1.5-0.5b on CPU): "
+      f"TTFT {m['ttft_ms']:.1f} ms, TPOT {m['tpot_ms']:.1f} ms")

@@ -1,0 +1,71 @@
+"""End-to-end training driver example: a ~100M-parameter llama-family model
+trained for a few hundred steps on synthetic data, with checkpointing,
+preemption safety, straggler tracking, and ELANA energy accounting.
+
+    PYTHONPATH=src python examples/train_100m.py              # full run
+    PYTHONPATH=src python examples/train_100m.py --tiny       # CI-speed run
+
+On the CPU dev rig the full ~100M config runs at a few seconds/step; on
+real hardware point ``--mesh production`` at a pod.
+"""
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.launch.train import build_argparser, train
+from repro.models.config import ModelConfig
+
+# ~100M params: 12 layers, d=768, llama-style (tied embeddings)
+MODEL_100M = ModelConfig(
+    name="llama-100m", family="dense",
+    num_layers=12, d_model=768, num_heads=12, num_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab_size=32_000, tie_embeddings=True,
+    dtype="float32", param_dtype="float32",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced model + 30 steps (smoke/CI)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/elana_train_100m")
+    args = ap.parse_args()
+
+    import repro.configs as configs
+
+    # register the example model so the generic driver can find it
+    name = "llama-100m"
+    if args.tiny:
+        cfg = MODEL_100M.replace(num_layers=4, d_model=128, num_heads=4,
+                                 num_kv_heads=2, head_dim=32, d_ff=256,
+                                 vocab_size=512)
+    else:
+        cfg = MODEL_100M
+    import sys
+    import types
+
+    mod = types.ModuleType("repro.configs.llama_100m")
+    mod.CONFIG = cfg
+    mod.SMOKE = cfg
+    sys.modules["repro.configs.llama_100m"] = mod
+    configs._MODULES[name] = "llama_100m"
+
+    steps = 30 if args.tiny else args.steps
+    targs = build_argparser().parse_args([
+        "--arch", name, "--steps", str(steps),
+        "--batch", "8", "--seq-len", "128" if not args.tiny else "64",
+        "--lr", "3e-3", "--warmup", "20",
+        "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+        "--energy", "--log-every", "10",
+    ])
+    out = train(targs)
+    print(json.dumps(out, indent=2))
+    assert out["loss_last"] < out["loss_first"], "loss did not decrease!"
+    print(f"\nloss {out['loss_first']:.3f} -> {out['loss_last']:.3f} over "
+          f"{out['steps']} steps; checkpoints in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Architecture registry: ``--arch <id>`` lookup for every supported config.
+
+``ASSIGNED`` is the ten-architecture pool from the assignment; ``PAPER`` is
+the three models profiled in the ELANA paper itself (Tables 2-4).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig  # noqa: F401
+
+_MODULES: Dict[str, str] = {
+    # assigned pool
+    "minitron-4b": "minitron_4b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "llava-next-34b": "llava_next_34b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    # the paper's own models
+    "llama3.1-8b": "llama31_8b",
+    "qwen2.5-7b": "qwen25_7b",
+    "nemotron-h-8b": "nemotron_h_8b",
+    "llama3.2-1b": "llama32_1b",
+    "qwen2.5-1.5b": "qwen25_1_5b",
+}
+
+ASSIGNED: List[str] = list(_MODULES)[:10]
+PAPER: List[str] = list(_MODULES)[10:]
+
+
+def get_config(name: str, smoke: bool = False) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    cfg = mod.SMOKE if smoke else mod.CONFIG
+    return cfg.validate()
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)

@@ -1,0 +1,6 @@
+"""ELANA core: the paper's profiling contribution, JAX/TPU-native.
+
+Submodules: units, hardware, size, cache, latency, energy, estimator, hlo,
+trace, report, profiler (the ``Elana`` orchestrator).
+"""
+from repro.core.profiler import Elana  # noqa: F401

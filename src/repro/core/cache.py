@@ -1,0 +1,97 @@
+"""KV / SSM / hybrid cache-size profiling (paper §2.2, Table 2).
+
+Like ``core.size``, this evaluates the *real* decode-cache constructor under
+``jax.eval_shape`` so the report reflects exactly what the runtime would
+allocate for a (batch, seq_len) workload — attention KV, ring-buffered
+sliding-window KV, recurrent matrix/scalar states, conv histories, and
+cross-attention memory are all classified separately.  The paper's Table 2
+reports attention-KV-dominated numbers; ``kv_bytes`` is the comparable
+column and ``state_bytes`` is the SSM/recurrent extension.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import units
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class CacheReport:
+    name: str
+    batch: int
+    seq_len: int
+    total_bytes: int
+    kv_bytes: int           # self-attention KV (full or windowed)
+    state_bytes: int        # recurrent states (RG-LRU h, mLSTM C/n/m, conv)
+    cross_bytes: int        # encoder-decoder cross-attention memory
+    meta_bytes: int         # position bookkeeping
+    by_kind: Dict[str, int]
+
+    def fmt(self, unit: str = "GB") -> str:
+        f = lambda b: units.fmt_bytes(b, unit)
+        return (
+            f"{self.name} cache @ batch={self.batch}, L={self.seq_len}: "
+            f"total {f(self.total_bytes)} "
+            f"(kv {f(self.kv_bytes)}, state {f(self.state_bytes)}, "
+            f"cross {f(self.cross_bytes)})"
+        )
+
+
+def _classify(path) -> str:
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    for k in keys:
+        if k in ("cross_k", "cross_v"):
+            return "cross"
+        if k in ("pos", "ring"):
+            return "meta"
+    # inside a "self" attn entry -> kv; recurrent state names -> state
+    if any(k == "self" for k in keys):
+        return "kv"
+    if keys[-1] in ("k", "v"):
+        return "kv"
+    return "state"
+
+
+def profile_cache(
+    cfg: ModelConfig, batch: int, seq_len: int, dtype=None
+) -> CacheReport:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    tree = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, batch, seq_len, dtype)
+    )
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    by_kind: Dict[str, int] = {"kv": 0, "state": 0, "cross": 0, "meta": 0}
+    for path, leaf in flat:
+        nbytes = int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+        by_kind[_classify(path)] += nbytes
+    total = sum(by_kind.values())
+    return CacheReport(
+        name=cfg.name, batch=batch, seq_len=seq_len,
+        total_bytes=total,
+        kv_bytes=by_kind["kv"], state_bytes=by_kind["state"],
+        cross_bytes=by_kind["cross"], meta_bytes=by_kind["meta"],
+        by_kind=by_kind,
+    )
+
+
+def analytic_kv_bytes(cfg: ModelConfig, batch: int, seq_len: int,
+                      itemsize: int = 2) -> int:
+    """Closed-form attention-KV bytes — the cross-check oracle for tests
+    and the formula the paper's Table 2 corresponds to."""
+    total = 0
+    for kind in cfg.blocks():
+        if kind == "attn":
+            length = seq_len
+        elif kind == "local_attn":
+            length = min(cfg.sliding_window, seq_len)
+        else:
+            continue
+        total += 2 * batch * length * cfg.num_kv_heads * cfg.resolved_head_dim * itemsize
+    return total

@@ -1,0 +1,204 @@
+"""Energy profiling (paper §2.4), JAX/TPU adaptation.
+
+The paper's method: a separate process samples instantaneous power at 10 Hz
+(pynvml on server GPUs, jtop on Jetson), the average power over the latency
+window is multiplied by the measured latency, and multi-GPU powers are
+summed.  We reproduce the method exactly with a pluggable ``PowerReader``:
+
+* ``NvmlReader``      — NVIDIA GPUs via pynvml (when available).
+* ``JtopReader``      — Jetson on-board sensors via jetson-stats (when available).
+* ``ProcStatReader``  — CPU dev rig: /proc/stat utilization × TDP model.
+* ``ModelReader``     — utilization-scaled TDP model for hardware without a
+  userspace power API (TPUs) or for estimator-mode accounting.
+* ``SyntheticReader`` — deterministic waveform for tests.
+
+``PowerMonitor`` runs the sampler in a background thread (the in-process
+analogue of the paper's sampler process — JAX dispatch releases the GIL, so
+a thread gives the same 10 Hz cadence without pickling device handles).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+class PowerReader:
+    """Interface: instantaneous power in watts, one value per device."""
+
+    def read_watts(self) -> Sequence[float]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class SyntheticReader(PowerReader):
+    def __init__(self, fn: Callable[[float], float], n_devices: int = 1):
+        self._fn = fn
+        self._n = n_devices
+        self._t0 = time.perf_counter()
+
+    def read_watts(self) -> Sequence[float]:
+        w = self._fn(time.perf_counter() - self._t0)
+        return [w] * self._n
+
+
+class ModelReader(PowerReader):
+    """Utilization-scaled TDP model (TPU has no userspace power API)."""
+
+    def __init__(self, idle_watts: float, tdp_watts: float,
+                 utilization_fn: Optional[Callable[[], float]] = None,
+                 n_devices: int = 1):
+        self.idle = idle_watts
+        self.tdp = tdp_watts
+        self.util_fn = utilization_fn or (lambda: 1.0)
+        self._n = n_devices
+
+    def read_watts(self) -> Sequence[float]:
+        u = min(max(self.util_fn(), 0.0), 1.0)
+        return [self.idle + (self.tdp - self.idle) * u] * self._n
+
+
+class ProcStatReader(PowerReader):
+    """CPU package power proxy from /proc/stat busy fraction × TDP."""
+
+    def __init__(self, idle_watts: float = 10.0, tdp_watts: float = 65.0):
+        self.idle = idle_watts
+        self.tdp = tdp_watts
+        self._last = self._read_stat()
+
+    @staticmethod
+    def _read_stat() -> Tuple[float, float]:
+        with open("/proc/stat") as f:
+            parts = f.readline().split()[1:]
+        vals = [float(x) for x in parts[:8]]
+        idle = vals[3] + vals[4]
+        total = sum(vals)
+        return idle, total
+
+    def read_watts(self) -> Sequence[float]:
+        idle, total = self._read_stat()
+        last_idle, last_total = self._last
+        self._last = (idle, total)
+        d_total = total - last_total
+        busy = 1.0 - (idle - last_idle) / d_total if d_total > 0 else 0.0
+        return [self.idle + (self.tdp - self.idle) * busy]
+
+
+class NvmlReader(PowerReader):  # pragma: no cover - needs NVIDIA hardware
+    def __init__(self, device_indices: Optional[Sequence[int]] = None):
+        import pynvml
+
+        self._nvml = pynvml
+        pynvml.nvmlInit()
+        n = pynvml.nvmlDeviceGetCount()
+        idx = list(device_indices) if device_indices else list(range(n))
+        self._handles = [pynvml.nvmlDeviceGetHandleByIndex(i) for i in idx]
+
+    def read_watts(self) -> Sequence[float]:
+        return [self._nvml.nvmlDeviceGetPowerUsage(h) / 1000.0
+                for h in self._handles]
+
+    def close(self) -> None:
+        self._nvml.nvmlShutdown()
+
+
+class JtopReader(PowerReader):  # pragma: no cover - needs Jetson hardware
+    def __init__(self):
+        from jtop import jtop
+
+        self._jtop = jtop()
+        self._jtop.start()
+
+    def read_watts(self) -> Sequence[float]:
+        power = self._jtop.power
+        return [power["rail"]["GPU"]["power"] / 1000.0]
+
+    def close(self) -> None:
+        self._jtop.close()
+
+
+@dataclasses.dataclass
+class EnergyResult:
+    duration_s: float
+    avg_watts: float            # summed across devices (paper: multi-GPU sum)
+    joules: float
+    samples: List[Tuple[float, List[float]]]  # (t, per-device watts)
+    n_devices: int
+
+    def per(self, count: int) -> float:
+        """J/Token, J/Prompt, J/Request — divide by the unit count."""
+        return self.joules / max(count, 1)
+
+
+class PowerMonitor:
+    """10 Hz sampler thread; use as a context manager around a workload."""
+
+    def __init__(self, reader: PowerReader, interval_s: float = 0.1):
+        self.reader = reader
+        self.interval_s = interval_s
+        self._samples: List[Tuple[float, List[float]]] = []
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._t0 = 0.0
+        self._t1 = 0.0
+
+    def _loop(self):
+        while not self._stop.is_set():
+            t = time.perf_counter()
+            try:
+                watts = list(self.reader.read_watts())
+            except Exception:
+                watts = []
+            if watts:
+                self._samples.append((t, watts))
+            self._stop.wait(self.interval_s)
+
+    def __enter__(self) -> "PowerMonitor":
+        self._samples.clear()
+        self._stop.clear()
+        self._t0 = time.perf_counter()
+        # one synchronous sample so even sub-interval windows are covered
+        try:
+            self._samples.append((self._t0, list(self.reader.read_watts())))
+        except Exception:
+            pass
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._t1 = time.perf_counter()
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+
+    def result(self) -> EnergyResult:
+        duration = max(self._t1 - self._t0, 1e-9)
+        window = [(t, w) for t, w in self._samples if self._t0 <= t <= self._t1 + 1e-3]
+        if not window:
+            window = self._samples[-1:] or [(self._t0, [0.0])]
+        n_dev = max(len(w) for _, w in window)
+        # average power over the measurement window, summed across devices
+        avg = sum(sum(w) for _, w in window) / len(window)
+        return EnergyResult(
+            duration_s=duration,
+            avg_watts=avg,
+            joules=avg * duration,
+            samples=window,
+            n_devices=n_dev,
+        )
+
+
+def measure_energy(
+    fn: Callable[[], object], reader: PowerReader, interval_s: float = 0.1
+) -> EnergyResult:
+    """Run ``fn`` under the sampler; energy = window-average power × latency."""
+    import jax
+
+    with PowerMonitor(reader, interval_s) as mon:
+        jax.block_until_ready(fn())
+    return mon.result()

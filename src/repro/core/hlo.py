@@ -1,0 +1,150 @@
+"""Compiled-HLO analysis: FLOPs / bytes from ``cost_analysis`` and
+collective-traffic accounting parsed from the post-SPMD HLO text.
+
+``cost_analysis()`` does not attribute collective traffic, so
+``collective_stats`` scans ``compiled.as_text()`` (collectives only exist
+after SPMD partitioning — the pre-partition ``lowered.as_text()`` has none)
+and sums operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op.  These are the §Roofline collective
+terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.counts.values())
+
+    def fmt(self) -> str:
+        if not self.counts:
+            return "no collectives"
+        parts = [
+            f"{k}: {self.counts[k]}x / {self.bytes_by_kind[k]/1e6:.1f} MB"
+            for k in sorted(self.counts)
+        ]
+        return ", ".join(parts)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO.
+
+    Result bytes are used (per the assignment: operand sizes ≈ the data a
+    collective moves; for all-reduce operand==result, for all-gather the
+    result is the full gathered tensor which is what transits the links).
+    ``-start``/``-done`` async pairs are counted once (on ``-start``).
+    """
+    counts: Dict[str, int] = {}
+    bytes_by_kind: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        # fast pre-filter
+        if "all-" not in line and "reduce-scatter" not in line and \
+                "collective-permute" not in line:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:  # async completion: already counted at -start
+            continue
+        result_types, kind = m.group(1), m.group(2)
+        nbytes = sum(
+            _shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(result_types)
+        )
+        counts[kind] = counts.get(kind, 0) + 1
+        bytes_by_kind[kind] = bytes_by_kind.get(kind, 0) + nbytes
+    return CollectiveStats(counts=counts, bytes_by_kind=bytes_by_kind)
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float
+    transcendentals: float
+    bytes_accessed: int
+    output_bytes: int
+    argument_bytes: int
+    temp_bytes: int
+    generated_code_bytes: int
+    collectives: CollectiveStats
+
+    def fmt(self) -> str:
+        return (
+            f"flops={self.flops:.3e} bytes={self.bytes_accessed:.3e} "
+            f"args={self.argument_bytes/1e9:.2f}GB out={self.output_bytes/1e9:.2f}GB "
+            f"temp={self.temp_bytes/1e9:.2f}GB | {self.collectives.fmt()}"
+        )
+
+
+def summarize_compiled(compiled, hlo_text: Optional[str] = None) -> CostSummary:
+    """Extract the roofline inputs from a jax compiled executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+
+    def _mem(attr):
+        return int(getattr(mem, attr, 0) or 0)
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    return CostSummary(
+        flops=float(cost.get("flops", 0.0)),
+        transcendentals=float(cost.get("transcendentals", 0.0)),
+        bytes_accessed=int(cost.get("bytes accessed", 0)),
+        output_bytes=int(cost.get("bytes accessed output", 0)),
+        argument_bytes=_mem("argument_size_in_bytes"),
+        temp_bytes=_mem("temp_size_in_bytes"),
+        generated_code_bytes=_mem("generated_code_size_in_bytes"),
+        collectives=collective_stats(text),
+    )
+
+
+def op_histogram(hlo_text: str, top: int = 25) -> List[Tuple[str, int]]:
+    """Instruction-kind histogram of the optimized HLO (debug aid for remat
+    waste: duplicate dot/fusion counts show recompute)."""
+    hist: Dict[str, int] = {}
+    op_re = re.compile(r"=\s*(?:\([^)]*\)|[a-z0-9\[\],{}]+)\s+([a-z][\w\-]*)\(")
+    for line in hlo_text.splitlines():
+        m = op_re.search(line)
+        if m:
+            hist[m.group(1)] = hist.get(m.group(1), 0) + 1
+    return sorted(hist.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,185 @@
+"""Measured-mode latency profiling: TTFT / TPOT / TTLT (paper §2.3).
+
+Semantics follow the paper:
+
+* **TTFT** — latency of the prefill forward pass.  Prompts are random; the
+  prefill executable is *not* pre-warmed across prompt lengths (the paper
+  does not CUDA-graph-cache prefill) — each distinct prompt length pays its
+  own compile, which we report separately as ``compile_s``.
+* **TPOT** — inter-token interval during autoregressive decode with a
+  prefilled cache, using an AOT-compiled ``decode_step`` replayed across
+  steps (the jit analogue of the paper's CUDA-graph-cached generation).
+* **TTLT** — end-to-end prefill + generation for a batch of requests.
+
+All timings use host ``perf_counter`` around ``jax.block_until_ready`` —
+the device-synchronization equivalent of ``torch.cuda.synchronize``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    name: str
+    samples_s: List[float]
+    compile_s: float = 0.0
+
+    @property
+    def mean_s(self) -> float:
+        return statistics.fmean(self.samples_s)
+
+    @property
+    def std_s(self) -> float:
+        return statistics.pstdev(self.samples_s) if len(self.samples_s) > 1 else 0.0
+
+    @property
+    def p50_s(self) -> float:
+        return statistics.median(self.samples_s)
+
+    @property
+    def p95_s(self) -> float:
+        xs = sorted(self.samples_s)
+        return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+
+    @property
+    def mean_ms(self) -> float:
+        return self.mean_s * 1e3
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "name": self.name, "mean_ms": self.mean_ms,
+            "std_ms": self.std_s * 1e3, "p50_ms": self.p50_s * 1e3,
+            "p95_ms": self.p95_s * 1e3, "n": len(self.samples_s),
+            "compile_ms": self.compile_s * 1e3,
+        }
+
+
+def time_callable(
+    fn: Callable[[], object], iters: int = 10, warmup: int = 2, name: str = "fn"
+) -> LatencyStats:
+    t0 = time.perf_counter()
+    for _ in range(max(warmup, 1)):
+        jax.block_until_ready(fn())
+    compile_s = time.perf_counter() - t0
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        samples.append(time.perf_counter() - t0)
+    return LatencyStats(name=name, samples_s=samples, compile_s=compile_s)
+
+
+class LatencyProfiler:
+    """TTFT / TPOT / TTLT measurement for one model + workload."""
+
+    def __init__(self, cfg: ModelConfig, params, *, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill_jit = jax.jit(
+            lambda p, batch, cache: model_lib.prefill(cfg, p, batch, cache)
+        )
+        self._decode_jit = jax.jit(
+            lambda p, tok, pos, cache: model_lib.decode_step(cfg, p, tok, pos, cache)
+        )
+
+    # -- helpers -------------------------------------------------------------
+    def _random_batch(self, batch: int, prompt_len: int) -> Dict:
+        cfg = self.cfg
+        self.key, k1, k2, k3 = jax.random.split(self.key, 4)
+        tok_len = prompt_len
+        out: Dict = {}
+        if cfg.num_vision_tokens:
+            tok_len = max(1, prompt_len - cfg.num_vision_tokens)
+            out["vision_embeds"] = 0.1 * jax.random.normal(
+                k2, (batch, cfg.num_vision_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        out["tokens"] = jax.random.randint(k1, (batch, tok_len), 0, cfg.vocab_size)
+        if cfg.is_encdec:
+            out["enc_embeds"] = 0.1 * jax.random.normal(
+                k3, (batch, max(prompt_len // 2, 1), cfg.d_model), jnp.dtype(cfg.dtype)
+            )
+        return out
+
+    def _fresh_cache(self, batch: int, max_len: int):
+        return model_lib.init_cache(self.cfg, batch, max_len, jnp.dtype(self.cfg.dtype))
+
+    # -- metrics ---------------------------------------------------------------
+    def ttft(self, batch: int, prompt_len: int, iters: int = 10,
+             warmup: int = 2) -> LatencyStats:
+        """Prefill latency; fresh random prompt each run (paper §2.3)."""
+        max_len = prompt_len + 1
+        cache = self._fresh_cache(batch, max_len)
+        samples, t_compile = [], 0.0
+        for i in range(warmup + iters):
+            b = self._random_batch(batch, prompt_len)
+            t0 = time.perf_counter()
+            logits, _ = self._prefill_jit(self.params, b, cache)
+            jax.block_until_ready(logits)
+            dt = time.perf_counter() - t0
+            if i < warmup:
+                t_compile += dt
+            else:
+                samples.append(dt)
+        return LatencyStats(name="ttft", samples_s=samples, compile_s=t_compile)
+
+    def tpot(self, batch: int, prompt_len: int, gen_len: int = 32,
+             warmup: int = 2) -> LatencyStats:
+        """Per-token decode latency after prefilling a random prompt."""
+        max_len = prompt_len + gen_len + 1
+        cache = self._fresh_cache(batch, max_len)
+        b = self._random_batch(batch, prompt_len)
+        logits, cache = jax.block_until_ready(
+            self._prefill_jit(self.params, b, cache))
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        # warm the decode executable (CUDA-graph analogue: compile once)
+        t0 = time.perf_counter()
+        for i in range(warmup):
+            _l, _c = self._decode_jit(
+                self.params, tok, jnp.asarray(prompt_len + 0, jnp.int32), cache)
+            jax.block_until_ready(_l)
+        compile_s = time.perf_counter() - t0
+        samples = []
+        pos = prompt_len
+        for i in range(gen_len):
+            t0 = time.perf_counter()
+            logits, cache = self._decode_jit(
+                self.params, tok, jnp.asarray(pos, jnp.int32), cache)
+            jax.block_until_ready(logits)
+            samples.append(time.perf_counter() - t0)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            pos += 1
+        return LatencyStats(name="tpot", samples_s=samples, compile_s=compile_s)
+
+    def ttlt(self, batch: int, prompt_len: int, gen_len: int,
+             iters: int = 3) -> LatencyStats:
+        """End-to-end request latency: prefill + gen_len decode steps."""
+        max_len = prompt_len + gen_len + 1
+        # warm both executables
+        self.ttft(batch, prompt_len, iters=1, warmup=1)
+        self.tpot(batch, prompt_len, gen_len=1, warmup=1)
+        samples = []
+        for _ in range(iters):
+            cache = self._fresh_cache(batch, max_len)
+            b = self._random_batch(batch, prompt_len)
+            t0 = time.perf_counter()
+            logits, cache = self._prefill_jit(self.params, b, cache)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            for i in range(gen_len):
+                logits, cache = self._decode_jit(
+                    self.params, tok, jnp.asarray(prompt_len + i, jnp.int32), cache)
+                tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            jax.block_until_ready(logits)
+            samples.append(time.perf_counter() - t0)
+        return LatencyStats(name="ttlt", samples_s=samples)

@@ -1,0 +1,65 @@
+"""Report rendering: the paper's Table-2/3/4 layouts as markdown / CSV."""
+
+from __future__ import annotations
+
+import io
+from typing import Dict, Iterable, List, Optional, Sequence
+
+
+def to_markdown(rows: Sequence[Dict], columns: Optional[List[str]] = None,
+                floatfmt: str = ".2f") -> str:
+    if not rows:
+        return "(empty)"
+    cols = columns or list(rows[0].keys())
+
+    def cell(v):
+        if isinstance(v, float):
+            return format(v, floatfmt)
+        return str(v)
+
+    widths = {c: max(len(c), *(len(cell(r.get(c, ""))) for r in rows)) for c in cols}
+    out = ["| " + " | ".join(c.ljust(widths[c]) for c in cols) + " |"]
+    out.append("|" + "|".join("-" * (widths[c] + 2) for c in cols) + "|")
+    for r in rows:
+        out.append("| " + " | ".join(cell(r.get(c, "")).ljust(widths[c]) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def to_csv(rows: Sequence[Dict], columns: Optional[List[str]] = None) -> str:
+    if not rows:
+        return ""
+    cols = columns or list(rows[0].keys())
+    buf = io.StringIO()
+    buf.write(",".join(cols) + "\n")
+    for r in rows:
+        buf.write(",".join(str(r.get(c, "")) for c in cols) + "\n")
+    return buf.getvalue()
+
+
+def table2_rows(size_reports, cache_reports_by_workload) -> List[Dict]:
+    """Paper Table 2: params + cache sizes across (bsize, L) workloads."""
+    rows = []
+    for rep in size_reports:
+        row = {"Model": rep.name, "Param.": f"{rep.param_bytes/1e9:.2f} GB"}
+        for (bsize, L), cache_rep in cache_reports_by_workload.get(rep.name, {}).items():
+            row[f"bsize={bsize}, L={L}"] = f"{cache_rep.total_bytes/1e9:.2f} GB"
+        rows.append(row)
+    return rows
+
+
+def table3_rows(estimates) -> List[Dict]:
+    """Paper Table 3/4: TTFT / J/Prom / TPOT / J/Tok / TTLT / J/Req."""
+    rows = []
+    for est in estimates:
+        rows.append({
+            "Model": est.arch,
+            "HW": f"{est.hardware} x{est.n_devices}",
+            "Workload": f"bsize={est.batch}, L={est.prompt_len}+{est.gen_len}",
+            "TTFT(ms)": round(est.ttft.latency_s * 1e3, 2),
+            "J/Prom.": round(est.ttft.joules, 2),
+            "TPOT(ms)": round(est.tpot.latency_s * 1e3, 2),
+            "J/Tok.": round(est.tpot.joules, 2),
+            "TTLT(ms)": round(est.ttlt.latency_s * 1e3, 2),
+            "J/Req.": round(est.ttlt.joules, 2),
+        })
+    return rows

@@ -1,0 +1,118 @@
+"""Model-size profiling (paper §2.2, Table 2).
+
+Sizes are derived from ``jax.eval_shape`` over the real ``init`` function —
+i.e. the *exact* parameter tree the runtime allocates, with zero device
+memory touched.  This is the TPU/JAX analogue of ELANA walking
+``model.parameters()`` / ``model.buffers()``: trainable weights and
+auxiliary buffers (e.g. the RG-LRU Λ constants) are both counted because
+both live in the params pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import units
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class SizeReport:
+    name: str
+    param_count: int                      # total parameters (incl. buffers)
+    param_bytes: int
+    active_param_count: int               # MoE: per-token activated params
+    active_param_bytes: int
+    by_component: Dict[str, int]          # component -> bytes
+    dtype: str
+
+    def fmt(self, unit: str = "GB") -> str:
+        lines = [
+            f"model: {self.name}",
+            f"  params: {self.param_count/1e9:.3f} B "
+            f"({units.fmt_bytes(self.param_bytes, unit)}, {self.dtype})",
+        ]
+        if self.active_param_count != self.param_count:
+            lines.append(
+                f"  active params/token: {self.active_param_count/1e9:.3f} B "
+                f"({units.fmt_bytes(self.active_param_bytes, unit)})"
+            )
+        for comp, nbytes in sorted(self.by_component.items(), key=lambda kv: -kv[1]):
+            lines.append(f"    {comp:<28s} {units.fmt_bytes(nbytes, unit)}")
+        return "\n".join(lines)
+
+
+def _shape_tree(cfg: ModelConfig):
+    """Parameter ShapeDtypeStruct tree without allocating anything."""
+    return jax.eval_shape(
+        lambda key: model_lib.init(cfg, key)[0], jax.random.PRNGKey(0)
+    )
+
+
+def _leaf_bytes(leaf) -> int:
+    return int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+
+
+def _component(path) -> str:
+    """Group leaf paths into human-meaningful components."""
+    keys = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+    if keys[0] in ("embed", "lm_head"):
+        return keys[0]
+    # decoder/encoder -> groups/rest -> <idx> -> block part
+    stack = keys[0]
+    part = None
+    for k in keys[1:]:
+        if k in ("attn", "cross", "mlp", "rec", "cell") or k.startswith("norm"):
+            part = k
+            break
+    if part is None:
+        part = keys[-2] if len(keys) > 1 else keys[-1]
+    if "norm" in part or part == "scale":
+        part = "norms"
+    return f"{stack}.{part}"
+
+
+def moe_active_fraction(cfg: ModelConfig) -> float:
+    """Fraction of expert weights active per token (1.0 for dense)."""
+    if not cfg.is_moe:
+        return 1.0
+    return cfg.num_experts_per_tok / cfg.num_experts
+
+
+def profile_size(cfg: ModelConfig, params=None) -> SizeReport:
+    """Size report from config (eval_shape) or a concrete params tree."""
+    tree = params if params is not None else _shape_tree(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    total_count = 0
+    total_bytes = 0
+    by_comp: Dict[str, int] = {}
+    expert_count = 0
+    expert_bytes = 0
+    for path, leaf in flat:
+        n, b = int(leaf.size), _leaf_bytes(leaf)
+        total_count += n
+        total_bytes += b
+        comp = _component(path)
+        by_comp[comp] = by_comp.get(comp, 0) + b
+        keys = [str(getattr(p, "key", p)) for p in path]
+        if cfg.is_moe and any(k in ("wg", "wu", "wd") for k in keys) and \
+                "shared" not in keys and any(k == "mlp" for k in keys):
+            expert_count += n
+            expert_bytes += b
+    frac = moe_active_fraction(cfg)
+    active_count = total_count - expert_count + int(expert_count * frac)
+    active_bytes = total_bytes - expert_bytes + int(expert_bytes * frac)
+    return SizeReport(
+        name=cfg.name,
+        param_count=total_count,
+        param_bytes=total_bytes,
+        active_param_count=active_count,
+        active_param_bytes=active_bytes,
+        by_component=by_comp,
+        dtype=str(cfg.param_dtype),
+    )

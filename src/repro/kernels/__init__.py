@@ -1,0 +1,2 @@
+from repro.kernels import dispatch  # noqa: F401
+from repro.kernels.dispatch import set_backend, use_backend  # noqa: F401

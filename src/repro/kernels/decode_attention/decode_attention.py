@@ -1,0 +1,131 @@
+"""Pallas TPU decode attention: one query token per sequence over a long
+(possibly ring-buffered) KV cache.
+
+TPU-native design:
+  * GQA grouping is exploited for MXU utilization: the G query heads that
+    share one kv head are processed together as a (G, D) LHS, so the score
+    matmul is (G, D) x (D, bk) instead of G separate vector products.
+  * grid = (batch, kv_heads, kv_blocks); kv innermost, online-softmax
+    accumulators (G x D in fp32) in VMEM scratch — the split-K structure of
+    FlashDecoding mapped onto the sequential-grid + scratch idiom.
+  * ring-buffer validity and windowing come from the absolute-position
+    tile, same convention as the flash kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(
+    q_pos_ref,                  # (1, 1) int32
+    k_pos_ref,                  # (1, bk) int32
+    q_ref,                      # (1, 1, G, D)  — G q-heads of this kv head
+    k_ref, v_ref,               # (1, bk, 1, D)
+    o_ref,                      # (1, 1, G, D)
+    acc_ref, m_ref, l_ref,      # VMEM scratch: (G, D), (G, 1), (G, 1) f32
+    *,
+    window: int,
+    softcap: float,
+    scale: float,
+    num_kv_blocks: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_pos_ref[0, 0]
+    k_pos = k_pos_ref[0]                       # (bk,)
+    valid = (k_pos >= 0) & (k_pos <= q_pos)
+    if window > 0:
+        valid = valid & (q_pos - k_pos < window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)    # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                              # (G, bk)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "block_kv", "interpret")
+)
+def decode_attention(
+    q: jax.Array,              # (B, 1, Hq, D)
+    k_cache: jax.Array,        # (B, L, Hkv, D)
+    v_cache: jax.Array,
+    q_positions: jax.Array,    # (B, 1) int32
+    k_positions: jax.Array,    # (B, L) int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    assert S == 1, "decode kernel is single-token"
+    _, L, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    bk = min(block_kv, L)
+    assert L % bk == 0, (L, bk)
+    nk = L // bk
+    grid = (B, Hkv, nk)
+    # view q as (B, 1, Hkv, G, D) via reshape outside the call
+    qg = q.reshape(B, 1, Hkv * G, D)
+
+    kernel = functools.partial(
+        _kernel, window=window, softcap=softcap,
+        scale=1.0 / math.sqrt(D), num_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ki: (b, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, ki: (b, ki)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, 0, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions.astype(jnp.int32), k_positions.astype(jnp.int32),
+      qg, k_cache, v_cache)
+    return out.reshape(B, 1, Hq, D)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the decode-attention kernel.
+
+Single new query token per sequence attends over a (possibly ring-buffered)
+KV cache.  Slots with k_position == -1 are unfilled and masked; window
+masking uses absolute positions so ring buffers work unchanged.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def decode_attention(
+    q: jax.Array,          # (B, 1, Hq, D)
+    k_cache: jax.Array,    # (B, L, Hkv, D)
+    v_cache: jax.Array,    # (B, L, Hkv, D)
+    *,
+    q_positions: jax.Array,   # (B, 1)
+    k_positions: jax.Array,   # (B, L)
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    scores = jnp.einsum(
+        "bshgd,bthd->bhgst", qg, k_cache, preferred_element_type=jnp.float32
+    ) / math.sqrt(D)
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    valid = (k_positions >= 0) & (k_positions <= q_positions)  # (B, L)
+    if window > 0:
+        valid = valid & (q_positions - k_positions < window)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, S, Hq, D)

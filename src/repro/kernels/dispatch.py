@@ -1,0 +1,119 @@
+"""Kernel dispatch: route hot-spot ops to Pallas TPU kernels or the pure-jnp
+reference implementations.
+
+Backend selection:
+  * ``auto``   — Pallas on TPU, reference elsewhere (default).
+  * ``pallas`` — force Pallas (with ``interpret=True`` off-TPU; used by tests).
+  * ``xla``    — force the pure-jnp reference.  The multi-pod dry-run uses
+    this so ``compiled.cost_analysis()`` sees real HLO FLOPs (a Pallas call
+    is an opaque custom-call to XLA's cost model).
+
+The reference implementations live in each kernel's ``ref.py`` and are the
+oracles the Pallas kernels are tested against.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.backend = "auto"  # auto | pallas | xla
+        self.interpret = False
+
+
+_STATE = _State()
+
+
+def set_backend(backend: str, interpret: bool = False) -> None:
+    assert backend in ("auto", "pallas", "xla"), backend
+    _STATE.backend = backend
+    _STATE.interpret = interpret
+
+
+@contextlib.contextmanager
+def use_backend(backend: str, interpret: bool = False):
+    prev = (_STATE.backend, _STATE.interpret)
+    set_backend(backend, interpret)
+    try:
+        yield
+    finally:
+        _STATE.backend, _STATE.interpret = prev
+
+
+def _use_pallas() -> bool:
+    if _STATE.backend == "pallas":
+        return True
+    if _STATE.backend == "xla":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return _STATE.interpret or jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# public entry points
+# --------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, q_positions, k_positions, causal, window=0,
+                    softcap=0.0):
+    if _use_pallas():
+        from repro.kernels.flash_attention import ops
+        return ops.flash_attention(
+            q, k, v, q_positions=q_positions, k_positions=k_positions,
+            causal=causal, window=window, softcap=softcap,
+            interpret=_interpret(),
+        )
+    from repro.kernels.flash_attention import ref
+    # avoid materializing S x T fp32 scores for long sequences on the XLA
+    # path (threshold lowered 4096^2 -> 2048^2 in EXPERIMENTS §Perf llava
+    # iteration 2: the naive path's S x S fp32 score tensors dominated the
+    # train_4k memory roofline term ~10x)
+    if q.shape[1] * k.shape[1] > 2048 * 2048:
+        return ref.attention_chunked(
+            q, k, v, q_positions=q_positions, k_positions=k_positions,
+            causal=causal, window=window, softcap=softcap,
+        )
+    return ref.attention(
+        q, k, v, q_positions=q_positions, k_positions=k_positions,
+        causal=causal, window=window, softcap=softcap,
+    )
+
+
+def decode_attention(q, k_cache, v_cache, *, q_positions, k_positions,
+                     window=0, softcap=0.0):
+    if _use_pallas():
+        from repro.kernels.decode_attention import ops
+        return ops.decode_attention(
+            q, k_cache, v_cache, q_positions=q_positions,
+            k_positions=k_positions, window=window, softcap=softcap,
+            interpret=_interpret(),
+        )
+    from repro.kernels.decode_attention import ref
+    return ref.decode_attention(
+        q, k_cache, v_cache, q_positions=q_positions, k_positions=k_positions,
+        window=window, softcap=softcap,
+    )
+
+
+def linear_recurrence(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a,b: (B,S,W) fp32; h0: (B,W)."""
+    if _use_pallas():
+        from repro.kernels.linear_recurrence import ops
+        return ops.linear_recurrence(a, b, h0, interpret=_interpret())
+    from repro.kernels.linear_recurrence import ref
+    return ref.linear_recurrence(a, b, h0)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    if _use_pallas():
+        from repro.kernels.rmsnorm import ops
+        return ops.rmsnorm(x, scale, eps=eps, interpret=_interpret())
+    from repro.kernels.rmsnorm import ref
+    return ref.rmsnorm(x, scale, eps=eps)

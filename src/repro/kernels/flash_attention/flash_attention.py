@@ -1,0 +1,146 @@
+"""Pallas TPU flash attention (GQA, causal / sliding-window, soft-cap).
+
+TPU-native design (not a CUDA port):
+  * grid = (batch, q_heads, q_blocks, kv_blocks) — kv is the innermost
+    (sequential) dimension so the online-softmax accumulators live in VMEM
+    scratch across kv steps; batch/head/q dims are parallel.
+  * K/V tiles stream HBM→VMEM via BlockSpecs; block sizes default to 128
+    (q) × 256 (kv), multiples of the 128-lane MXU tiling.
+  * positions-based masking: causality, ring-buffer validity (pos == -1)
+    and sliding windows are all expressed on absolute positions, so the
+    same kernel serves training, prefill, and windowed layers.
+  * fully-masked kv blocks are skipped per-block using the loaded position
+    tiles (a dynamic analogue of the static causal block-skip).
+  * softmax statistics in fp32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _kernel(
+    q_pos_ref, k_pos_ref,          # (1, bq) / (1, bk) int32
+    q_ref, k_ref, v_ref,           # (1, bq, 1, D) / (1, bk, 1, D)
+    o_ref,                         # (1, bq, 1, D)
+    acc_ref, m_ref, l_ref,         # VMEM scratch: (bq, D) f32, (bq, 1) f32 x2
+    *,
+    causal: bool,
+    window: int,
+    softcap: float,
+    scale: float,
+    num_kv_blocks: int,
+):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_pos_ref[0]                      # (bq,)
+    k_pos = k_pos_ref[0]                      # (bk,)
+
+    # dynamic block-skip: can any query in this tile see any key in that tile?
+    visible = jnp.asarray(True)
+    if causal:
+        visible = jnp.max(q_pos) >= jnp.min(jnp.where(k_pos < 0, 2**30, k_pos))
+    if window > 0:
+        visible = visible & (jnp.min(q_pos) - jnp.max(k_pos) < window)
+    visible = visible & jnp.any(k_pos >= 0)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)   # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                   # (bq, bk)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        valid = (k_pos >= 0)[None, :]
+        if causal:
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        if window > 0:
+            valid = valid & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_ref[:, 0]                        # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(valid, p, 0.0)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_kv",
+                     "interpret"),
+)
+def flash_attention(
+    q: jax.Array,              # (B, S, Hq, D)
+    k: jax.Array,              # (B, T, Hkv, D)
+    v: jax.Array,
+    q_positions: jax.Array,    # (B, S) int32
+    k_positions: jax.Array,    # (B, T) int32
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_kv: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    bq = min(block_q, S)
+    bk = min(block_kv, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    grid = (B, Hq, nq, nk)
+    kv_map = lambda b, h, qi, ki: (b, ki, h * Hkv // Hq, 0)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, softcap=softcap,
+        scale=1.0 / math.sqrt(D), num_kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, h, qi, ki: (b, qi)),
+            pl.BlockSpec((1, bk), lambda b, h, qi, ki: (b, ki)),
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), kv_map),
+            pl.BlockSpec((1, bk, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions.astype(jnp.int32), k_positions.astype(jnp.int32), q, k, v)

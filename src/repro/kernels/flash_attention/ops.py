@@ -1,0 +1,64 @@
+"""Jit wrapper for the flash-attention kernel.
+
+Forward runs the Pallas kernel; backward differentiates the reference
+implementation (numerically identical math) via ``custom_vjp`` — the
+training path stays end-to-end differentiable with the kernel enabled.
+A dedicated backward kernel is a tracked perf-iteration item.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention as _pallas_fwd,
+)
+
+
+def _pick_blocks(S: int, T: int):
+    bq = 128 if S % 128 == 0 else max(g for g in (64, 32, 16, 8, 4, 2, 1) if S % g == 0)
+    bk = 256 if T % 256 == 0 else max(g for g in (128, 64, 32, 16, 8, 4, 2, 1) if T % g == 0)
+    return min(bq, S), min(bk, T)
+
+
+@functools.partial(
+    jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8)
+)
+def _attn(q, k, v, q_positions, k_positions, causal, window, softcap, interpret):
+    bq, bk = _pick_blocks(q.shape[1], k.shape[1])
+    return _pallas_fwd(
+        q, k, v, q_positions, k_positions,
+        causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_kv=bk, interpret=interpret,
+    )
+
+
+def _attn_fwd(q, k, v, q_positions, k_positions, causal, window, softcap, interpret):
+    out = _attn(q, k, v, q_positions, k_positions, causal, window, softcap, interpret)
+    return out, (q, k, v, q_positions, k_positions)
+
+
+def _attn_bwd(causal, window, softcap, interpret, res, g):
+    q, k, v, q_positions, k_positions = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention(
+            q_, k_, v_, q_positions=q_positions, k_positions=k_positions,
+            causal=causal, window=window, softcap=softcap,
+        ),
+        q, k, v,
+    )
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None
+
+
+_attn.defvjp(_attn_fwd, _attn_bwd)
+
+
+def flash_attention(q, k, v, *, q_positions, k_positions, causal, window=0,
+                    softcap=0.0, interpret=False):
+    return _attn(q, k, v, q_positions, k_positions, causal, window, softcap,
+                 interpret)

@@ -1,0 +1,127 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA, causal/windowed)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import flags
+
+NEG_INF = -2.0 ** 30
+
+
+def attention(
+    q: jax.Array,          # (B, S, Hq, D)
+    k: jax.Array,          # (B, T, Hkv, D)
+    v: jax.Array,          # (B, T, Hkv, D)
+    *,
+    q_positions: jax.Array,    # (B, S) int32
+    k_positions: jax.Array,    # (B, T) int32; -1 marks unfilled slots
+    causal: bool,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, S, Hkv, G, D)
+    scores = jnp.einsum(
+        "bshgd,bthd->bhgst", qg, k, preferred_element_type=jnp.float32
+    ) / math.sqrt(D)
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    valid = (k_positions >= 0)[:, None, None, None, :]
+    if causal:
+        valid = valid & (
+            q_positions[:, None, None, :, None]
+            >= k_positions[:, None, None, None, :]
+        )
+    if window > 0:
+        valid = valid & (
+            q_positions[:, None, None, :, None]
+            - k_positions[:, None, None, None, :]
+            < window
+        )
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
+    return o.reshape(B, S, Hq, D)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,
+    k_positions: jax.Array,
+    causal: bool,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 1024,
+) -> jax.Array:
+    """Flash-style chunked attention in pure jnp (exact, online softmax).
+
+    Memory scales with block_q x T instead of S x T — this is what the XLA
+    (non-Pallas) path lowers for 32k prefill so the dry-run never
+    materializes S x S scores.  lax.scan over q blocks; the scan is
+    log-compact HLO (and the dry-run's FLOPs correction accounts for it via
+    the unrolled lowering).
+    """
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, S)
+    if S % bq:
+        pad = bq - S % bq
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad)),
+                              constant_values=-1)
+        S_pad = S + pad
+    else:
+        S_pad = S
+    nq = S_pad // bq
+    T = k.shape[1]
+    qs = q.reshape(B, nq, bq, Hq, D).swapaxes(0, 1)          # (nq, B, bq, Hq, D)
+    qp = q_positions.reshape(B, nq, bq).swapaxes(0, 1)       # (nq, B, bq)
+    scale = 1.0 / math.sqrt(D)
+    # windowed attention over a contiguous layout only needs the KV band
+    # [i*bq - window, (i+1)*bq) per q block — avoids a window/seq-fold FLOPs
+    # overcount in the lowered HLO (and at runtime on the XLA path).
+    band = bq + (window if window > 0 else 0)
+    use_band = window > 0 and causal and band < T
+
+    def per_block(_, xs):
+        idx, qb, qpb = xs
+        if use_band:
+            start = jnp.clip(idx * bq - (band - bq), 0, T - band)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpb = jax.lax.dynamic_slice_in_dim(k_positions, start, band, axis=1)
+        else:
+            kb, vb, kpb = k, v, k_positions
+        qg = qb.reshape(B, bq, Hkv, G, D)
+        s = jnp.einsum("bshgd,bthd->bhgst", qg, kb,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        valid = (kpb >= 0)[:, None, None, None, :] \
+            & (qpb >= 0)[:, None, None, :, None]
+        if causal:
+            valid = valid & (qpb[:, None, None, :, None]
+                             >= kpb[:, None, None, None, :])
+        if window > 0:
+            valid = valid & (qpb[:, None, None, :, None]
+                             - kpb[:, None, None, None, :] < window)
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgst,bthd->bshgd", p.astype(vb.dtype), vb)
+        return None, o.reshape(B, bq, Hq, D)
+
+    idxs = jnp.arange(nq, dtype=jnp.int32)
+    _, outs = jax.lax.scan(per_block, None, (idxs, qs, qp),
+                           unroll=nq if flags.unroll_scans() else 1)
+    out = outs.swapaxes(0, 1).reshape(B, S_pad, Hq, D)
+    return out[:, :S]

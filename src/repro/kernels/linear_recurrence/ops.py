@@ -1,0 +1,48 @@
+"""Jit wrapper for the linear-recurrence kernel.
+
+Forward: Pallas; backward: reference vjp (the recurrence adjoint is itself
+a linear recurrence run in reverse — a dedicated bwd kernel is a tracked
+perf item).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.linear_recurrence import ref
+from repro.kernels.linear_recurrence.linear_recurrence import (
+    linear_recurrence as _pallas,
+)
+
+
+def _pick(n: int, prefs) -> int:
+    for b in prefs:
+        if n % b == 0:
+            return b
+    return 1
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _linrec(a, b, h0, interpret):
+    bs = _pick(a.shape[1], (256, 128, 64, 32, 16, 8, 4, 2, 1))
+    bw = _pick(a.shape[2], (512, 256, 128, 64, 32, 16, 8, 5, 4, 2, 1))
+    return _pallas(a, b, h0, block_s=bs, block_w=bw, interpret=interpret)
+
+
+def _fwd(a, b, h0, interpret):
+    return _linrec(a, b, h0, interpret), (a, b, h0)
+
+
+def _bwd(interpret, res, g):
+    a, b, h0 = res
+    _, vjp = jax.vjp(ref.linear_recurrence, a, b, h0)
+    return vjp(g)
+
+
+_linrec.defvjp(_fwd, _bwd)
+
+
+def linear_recurrence(a, b, h0, interpret=False):
+    return _linrec(a, b, h0, interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the linear-recurrence kernel.
+
+Computes h_t = a_t * h_{t-1} + b_t along axis 1 via ``associative_scan``
+(first-order linear recurrences compose associatively:
+(a1,b1) ∘ (a2,b2) = (a1*a2, a2*b1 + b2)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _combine(left, right):
+    a_l, b_l = left
+    a_r, b_r = right
+    return a_l * a_r, a_r * b_l + b_r
+
+
+def linear_recurrence(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """a, b: (B, S, W) fp32; h0: (B, W).  Returns h: (B, S, W)."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    # fold the initial state into the first step
+    b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(_combine, (a, b), axis=1)
+    return h

@@ -1,0 +1,32 @@
+"""Jit wrapper for the fused RMSNorm kernel (fwd Pallas, bwd reference vjp)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm import ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm as _pallas
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm(x, scale, eps, interpret):
+    return _pallas(x, scale, eps=eps, interpret=interpret)
+
+
+def _fwd(x, scale, eps, interpret):
+    return _rmsnorm(x, scale, eps, interpret), (x, scale)
+
+
+def _bwd(eps, interpret, res, g):
+    x, scale = res
+    _, vjp = jax.vjp(lambda x_, s_: ref.rmsnorm(x_, s_, eps=eps), x, scale)
+    return vjp(g)
+
+
+_rmsnorm.defvjp(_fwd, _bwd)
+
+
+def rmsnorm(x, scale, eps=1e-6, interpret=False):
+    return _rmsnorm(x, scale, eps, interpret)

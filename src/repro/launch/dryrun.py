@@ -1,0 +1,525 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers, SPMD-partitions, compiles, and fits — and extract the roofline
+terms from the compiled artifact.
+
+Per cell this produces (dumped to ``benchmarks/dryrun_results/*.json``):
+
+  * compile proof + ``memory_analysis()`` (bytes per device),
+  * ``cost_analysis()`` FLOPs/bytes of the compiled (scan-form) program,
+  * collective inventory + bytes parsed from the post-SPMD HLO text,
+  * **trip-count-corrected** totals: XLA's cost analysis visits a ``while``
+    body once, so the scan-over-layer-groups undercounts by ~G.  We lower an
+    *unrolled* variant (no mesh, global program) for exact FLOPs, and
+    compile a one-group probe under the same shardings to correct bytes and
+    collective bytes: total = full + (G-1) x group.
+  * the three roofline terms vs the assignment's v5e constants.
+
+Usage:
+  python -m repro.launch.dryrun --arch minitron-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--shapes train_4k,...]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.core import hlo as hlo_lib
+from repro.core import size as size_prof
+from repro.kernels import dispatch
+from repro.launch.mesh import make_production_mesh
+from repro.models import flags
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.sharding import partition, rules
+from repro.training.optimizer import AdamW, constant_schedule
+from repro.training import step as step_lib
+
+# assignment hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+# gradient-accumulation splits for train_4k (global batch 256); chosen so the
+# per-microbatch activation live-set fits 16 GB/chip HBM (validated by the
+# memory_analysis in each cell's JSON)
+TRAIN_MICROBATCHES = {
+    "default": 8,
+    "command-r-plus-104b": 16,
+    "llava-next-34b": 16,
+    "minitron-4b": 8,
+    "seamless-m4t-large-v2": 8,
+}
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "dryrun_results")
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if shape.kind in ("train", "prefill"):
+        tok_len = S
+        batch = {}
+        if cfg.num_vision_tokens:
+            tok_len = S - cfg.num_vision_tokens
+            batch["vision_embeds"] = sds((B, cfg.num_vision_tokens, cfg.d_model), dt)
+        if cfg.is_encdec:
+            tok_len = S // 2
+            batch["enc_embeds"] = sds((B, S // 2, cfg.d_model), dt)
+        batch["tokens"] = sds((B, tok_len), i32)
+        if shape.kind == "train":
+            batch["labels"] = sds((B, tok_len), i32)
+        return batch
+
+    if shape.kind == "decode":
+        cache = jax.eval_shape(lambda: model_lib.init_cache(cfg, B, S, dt))
+        return {
+            "token": sds((B, 1), i32),
+            "positions": sds((B,), i32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)
+
+
+def should_skip(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention architecture: 500k-token decode requires "
+                "sub-quadratic attention (DESIGN.md §4)")
+    return None
+
+
+# ---------------------------------------------------------------------------
+# step builders with shardings
+# ---------------------------------------------------------------------------
+
+def _build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, opts=frozenset()):
+    """Returns (jitted_fn, arg_specs: tuple) for lower()."""
+    param_shapes, axes = model_lib.param_axes(cfg)
+    param_sh = partition.param_shardings(axes, param_shapes, mesh)
+
+    if shape.kind == "train":
+        opt = AdamW(schedule=constant_schedule(1e-4))
+        state_shapes = jax.eval_shape(
+            lambda: step_lib.TrainState(
+                params=param_shapes,
+                opt=opt.init(param_shapes),
+                step=jnp.zeros((), jnp.int32),
+            )
+        )
+        state_sh = step_lib.TrainState(
+            params=param_sh,
+            opt=type(state_shapes.opt)(
+                mu=param_sh, nu=param_sh, count=partition.replicated(mesh)),
+            step=partition.replicated(mesh),
+        )
+        batch_shapes = input_specs(cfg, shape)
+        batch_sh = partition.batch_shardings(batch_shapes, mesh)
+        fn = step_lib.make_train_step(
+            cfg, opt, remat=True, microbatches=shape.microbatches,
+            param_pspecs=param_sh if "shard_grads" in opts else None)
+        jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=(0,))
+        return jitted, (state_shapes, batch_shapes)
+
+    if shape.kind == "prefill":
+        batch_shapes = input_specs(cfg, shape)
+        batch_sh = partition.batch_shardings(batch_shapes, mesh)
+        cache_shapes = jax.eval_shape(
+            lambda: model_lib.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                         jnp.dtype(cfg.dtype)))
+        cache_sh = partition.cache_shardings(cache_shapes, mesh)
+        fn = lambda p, b, c: model_lib.prefill(cfg, p, b, c)
+        jitted = jax.jit(fn, in_shardings=(param_sh, batch_sh, cache_sh),
+                         donate_argnums=(2,))
+        return jitted, (param_shapes, batch_shapes, cache_shapes)
+
+    # decode / serve_step
+    specs = input_specs(cfg, shape)
+    cache_sh = partition.cache_shardings(specs["cache"], mesh)
+    tok_sh = partition.batch_shardings(specs["token"], mesh)
+    pos_sh = partition.batch_shardings(specs["positions"], mesh)
+    fn = lambda p, t, pos, c: model_lib.decode_step(cfg, p, t, pos, c)
+    jitted = jax.jit(fn, in_shardings=(param_sh, tok_sh, pos_sh, cache_sh),
+                     donate_argnums=(3,))
+    return jitted, (param_shapes, specs["token"], specs["positions"],
+                    specs["cache"])
+
+
+# ---------------------------------------------------------------------------
+# group probe (bytes / collective correction)
+# ---------------------------------------------------------------------------
+
+def _build_group_probe(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       opts=frozenset()):
+    """One scan-group application under cell shardings; None if no groups."""
+    n_groups, _ = cfg.layer_groups()
+    if n_groups <= 1:
+        return None
+    param_shapes, axes = model_lib.param_axes(cfg)
+    if "groups" not in param_shapes.get("decoder", {}):
+        return None
+    g_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+        param_shapes["decoder"]["groups"])
+    g_axes = jax.tree.map(
+        lambda ax: tuple(ax[1:]),
+        axes["decoder"]["groups"],
+        is_leaf=lambda l: isinstance(l, tuple) and all(
+            isinstance(a, (str, type(None))) for a in l))
+    g_sh = partition.param_shardings(g_axes, g_shapes, mesh)
+
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    mb = B // shape.microbatches if shape.kind == "train" else B
+    pattern = cfg.block_pattern
+    memory = None
+    mem_sh = None
+    if cfg.is_encdec:
+        memory = jax.ShapeDtypeStruct((mb, S // 2, cfg.d_model), dt)
+        mem_sh = partition.batch_shardings(memory, mesh)
+
+    if shape.kind in ("train", "prefill"):
+        seq = S if shape.kind == "prefill" else (
+            S - cfg.num_vision_tokens if cfg.num_vision_tokens else
+            (S // 2 if cfg.is_encdec else S))
+        if cfg.num_vision_tokens:
+            seq = S  # vision prefix is part of the decoder sequence
+        x_spec = jax.ShapeDtypeStruct((mb, seq, cfg.d_model), dt)
+        x_sh = partition.batch_shardings(x_spec, mesh)
+
+        def group_fwd(x, gparams, memory=None):
+            positions = jnp.broadcast_to(
+                jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2])
+            for i, kind in enumerate(pattern):
+                x, _ = model_lib._apply_block_seq(
+                    gparams[str(i)], cfg, kind, x, positions, None, memory,
+                    causal=True, fill_cache=False)
+            return x
+
+        if shape.kind == "train":
+            def probe(x, gparams, memory=None):
+                def loss(gp):
+                    out = group_fwd(x, gp, memory)
+                    return jnp.sum(out.astype(jnp.float32) ** 2)
+                val, grads = jax.value_and_grad(loss)(gparams)
+                if "shard_grads" in opts:
+                    grads = jax.tree.map(
+                        lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                        grads, g_sh)
+                return val, grads
+        else:
+            probe = group_fwd
+        args = (x_spec, g_shapes) + ((memory,) if cfg.is_encdec else ())
+        shs = (x_sh, g_sh) + ((mem_sh,) if cfg.is_encdec else ())
+        return jax.jit(probe, in_shardings=shs), args
+
+    # decode probe: one group of _apply_block_decode
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, B, S, dt))
+    g_cache = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype),
+        cache_shapes["groups"])
+    g_cache_sh = partition.cache_shardings(
+        {"rest": g_cache}, mesh)["rest"]  # batch at axis 0 after stripping
+    x_spec = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+    pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+    if "serve_repl" in opts:
+        # weight-stationary serving replicates decode activations
+        x_sh = partition.replicated(mesh)
+        pos_sh = partition.replicated(mesh)
+    else:
+        x_sh = partition.batch_shardings(x_spec, mesh)
+        pos_sh = partition.batch_shardings(pos_spec, mesh)
+
+    def probe(x, gparams, gcache, positions):
+        nc = {}
+        for i, kind in enumerate(pattern):
+            x, nc[str(i)] = model_lib._apply_block_decode(
+                gparams[str(i)], cfg, kind, x, positions, gcache[str(i)])
+        return x, nc
+
+    return (jax.jit(probe, in_shardings=(x_sh, g_sh, g_cache_sh, pos_sh),
+                    donate_argnums=(2,)),
+            (x_spec, g_shapes, g_cache, pos_spec))
+
+
+def _build_micro_probe(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       opts=frozenset()):
+    """One microbatch fwd+bwd (embed + group-scan-once + unembed + loss)."""
+    import dataclasses as _dc
+
+    param_shapes, axes = model_lib.param_axes(cfg)
+    param_sh = partition.param_shardings(axes, param_shapes, mesh)
+    micro_shape = _dc.replace(shape, microbatches=1,
+                              global_batch=shape.global_batch // shape.microbatches)
+    batch_shapes = input_specs(cfg, micro_shape)
+    batch_sh = partition.batch_shardings(batch_shapes, mesh)
+    loss_fn = step_lib.make_loss_fn(cfg, remat=True)
+
+    def probe(params, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        if "shard_grads" in opts:
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(g, s),
+                grads, param_sh)
+        return loss, grads
+
+    return (jax.jit(probe, in_shardings=(param_sh, batch_sh)),
+            (param_shapes, batch_shapes))
+
+
+# ---------------------------------------------------------------------------
+# per-cell run
+# ---------------------------------------------------------------------------
+
+def _unrolled_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Exact global HLO FLOPs: unrolled lowering, no mesh, no compile."""
+    specs = input_specs(cfg, shape)
+    with flags.use_unroll():
+        if shape.kind == "train":
+            opt = AdamW(schedule=constant_schedule(1e-4))
+            state_shapes = jax.eval_shape(
+                lambda: step_lib.TrainState(
+                    params=model_lib.param_axes(cfg)[0],
+                    opt=opt.init(model_lib.param_axes(cfg)[0]),
+                    step=jnp.zeros((), jnp.int32)))
+            fn = step_lib.make_train_step(cfg, opt, remat=True,
+                                          microbatches=shape.microbatches)
+            lowered = jax.jit(fn).lower(state_shapes, specs)
+        elif shape.kind == "prefill":
+            params = model_lib.param_axes(cfg)[0]
+            cache = jax.eval_shape(lambda: model_lib.init_cache(
+                cfg, shape.global_batch, shape.seq_len, jnp.dtype(cfg.dtype)))
+            lowered = jax.jit(
+                lambda p, b, c: model_lib.prefill(cfg, p, b, c)
+            ).lower(params, specs, cache)
+        else:
+            params = model_lib.param_axes(cfg)[0]
+            lowered = jax.jit(
+                lambda p, t, pos, c: model_lib.decode_step(cfg, p, t, pos, c)
+            ).lower(params, specs["token"], specs["positions"], specs["cache"])
+    cost = lowered.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return float(cost.get("flops", 0.0))
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference)."""
+    rep = size_prof.profile_size(cfg)
+    n = rep.active_param_count
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.is_encdec:
+            tokens = shape.global_batch * shape.seq_len  # enc+dec halves
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # one decoded token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             skip_unroll: bool = False, opts=frozenset()) -> Dict:
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        mb = TRAIN_MICROBATCHES.get(arch, TRAIN_MICROBATCHES["default"])
+        # per-microbatch batch must stay divisible by the data-parallel size
+        dp = 32 if multi_pod else 16
+        mb = min(mb, max(shape.global_batch // dp, 1))
+        shape = _dc.replace(shape, microbatches=mb)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    result: Dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "chips": chips, "kind": shape.kind,
+    }
+    skip = should_skip(cfg, shape)
+    if skip:
+        result["status"] = "skipped"
+        result["reason"] = skip
+        return result
+
+    result["opts"] = sorted(opts)
+    dispatch.set_backend("xla")  # cost analysis needs real HLO
+    cell_rules = None
+    if "serve_repl" in opts and shape.kind == "decode":
+        cell_rules = rules.SERVE_RULES  # weight-stationary decode
+    t0 = time.time()
+    import contextlib as _ctx
+    moe_ctx = (flags.use_moe_blocked() if "moe_block" in opts
+               else _ctx.nullcontext())
+    with rules.use_mesh(mesh, cell_rules), moe_ctx:
+        jitted, arg_shapes = _build_cell(cfg, shape, mesh, opts)
+        lowered = jitted.lower(*arg_shapes)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        text = compiled.as_text()
+        summary = hlo_lib.summarize_compiled(compiled, text)
+        mem = compiled.memory_analysis()
+
+        # trip-count correction probes.  Post-SPMD cost numbers are
+        # per-device (the compiled module is the per-partition program):
+        #   real = full + (M-1) x micro + M x (G-1) x group   (train)
+        #   real = full + (G-1) x group                       (prefill/decode)
+        n_groups, _ = cfg.layer_groups()
+        M = shape.microbatches
+        flops_c = summary.flops
+        bytes_c = summary.bytes_accessed
+        coll_c = summary.collectives.total_bytes
+        if n_groups > 1:
+            probe = _build_group_probe(cfg, shape, mesh, opts)
+            if probe is not None:
+                pfn, pargs = probe
+                pcompiled = pfn.lower(*pargs).compile()
+                psum = hlo_lib.summarize_compiled(pcompiled, pcompiled.as_text())
+                g_reps = M * (n_groups - 1)
+                flops_c += g_reps * psum.flops
+                bytes_c += g_reps * psum.bytes_accessed
+                coll_c += g_reps * psum.collectives.total_bytes
+        if shape.kind == "train" and M > 1:
+            mfn, margs = _build_micro_probe(cfg, shape, mesh, opts)
+            mcompiled = mfn.lower(*margs).compile()
+            msum = hlo_lib.summarize_compiled(mcompiled, mcompiled.as_text())
+            # subtract the group scan counted once inside the micro probe —
+            # it is already covered by the group correction above
+            flops_c += (M - 1) * msum.flops
+            bytes_c += (M - 1) * msum.bytes_accessed
+            coll_c += (M - 1) * msum.collectives.total_bytes
+
+    flops_unrolled = None
+    if not skip_unroll:
+        try:
+            flops_unrolled = _unrolled_flops(cfg, shape)  # GLOBAL flops
+        except Exception as e:  # very large unrolls: fall back to correction
+            result["unroll_error"] = repr(e)
+
+    # corrected per-device totals -> the roofline terms are per-chip seconds
+    flops_global = flops_unrolled if flops_unrolled else flops_c * chips
+
+    mf = model_flops(cfg, shape)
+    compute_term = flops_global / (chips * PEAK_FLOPS)
+    memory_term = bytes_c / HBM_BW
+    coll_term = coll_c / LINK_BW
+    dominant = max(
+        (("compute", compute_term), ("memory", memory_term),
+         ("collective", coll_term)), key=lambda kv: kv[1])[0]
+
+    def _mem(attr):
+        return int(getattr(mem, attr, 0) or 0)
+
+    result.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": _mem("argument_size_in_bytes"),
+            "output_bytes_per_device": _mem("output_size_in_bytes"),
+            "temp_bytes_per_device": _mem("temp_size_in_bytes"),
+            "peak_bytes_estimate": _mem("argument_size_in_bytes")
+            + _mem("temp_size_in_bytes"),
+        },
+        "cost": {
+            "flops_perdev_compiled_once": summary.flops,
+            "flops_unrolled_global": flops_unrolled,
+            "flops_global": flops_global,
+            "flops_perdev_corrected": flops_c,
+            "bytes_perdev_compiled_once": summary.bytes_accessed,
+            "bytes_perdev_corrected": bytes_c,
+            "microbatches": shape.microbatches,
+        },
+        "collectives": {
+            "counts": summary.collectives.counts,
+            "bytes_by_kind_perdev_once": summary.collectives.bytes_by_kind,
+            "bytes_perdev_once": summary.collectives.total_bytes,
+            "bytes_perdev_corrected": coll_c,
+        },
+        "roofline": {
+            "compute_term_s": compute_term,
+            "memory_term_s": memory_term,
+            "collective_term_s": coll_term,
+            "dominant": dominant,
+            "model_flops": mf,
+            "useful_flops_ratio": mf / max(flops_global, 1.0),
+        },
+    })
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--shapes", default=None, help="comma-separated")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-unroll", action="store_true")
+    ap.add_argument("--opt", default="", help="comma list: shard_grads,serve_repl")
+    ap.add_argument("--out-dir", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out_dir or os.path.abspath(RESULTS_DIR)
+    os.makedirs(out_dir, exist_ok=True)
+    archs = list_archs()[:10] if args.all else [args.arch]
+    shapes = (args.shapes.split(",") if args.shapes
+              else (list(SHAPES) if (args.all or not args.shape)
+                    else [args.shape]))
+
+    opts = frozenset(x for x in args.opt.split(",") if x)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            tag = f"{arch}__{shape_name}__{'2x16x16' if args.multi_pod else '16x16'}"
+            if opts:
+                tag += "__opt-" + "-".join(sorted(opts))
+            path = os.path.join(out_dir, tag + ".json")
+            print(f"=== {tag} ===", flush=True)
+            try:
+                res = run_cell(arch, shape_name, args.multi_pod,
+                               skip_unroll=args.skip_unroll, opts=opts)
+            except Exception:
+                failures += 1
+                res = {"arch": arch, "shape": shape_name, "status": "error",
+                       "traceback": traceback.format_exc()}
+                print(res["traceback"], flush=True)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2)
+            if res["status"] == "ok":
+                r = res["roofline"]
+                print(f"  compile {res['compile_s']}s | "
+                      f"mem/dev {res['memory']['peak_bytes_estimate']/1e9:.2f} GB | "
+                      f"terms c={r['compute_term_s']*1e3:.2f}ms "
+                      f"m={r['memory_term_s']*1e3:.2f}ms "
+                      f"coll={r['collective_term_s']*1e3:.2f}ms "
+                      f"-> {r['dominant']} | useful={r['useful_flops_ratio']:.2f}",
+                      flush=True)
+            elif res["status"] == "skipped":
+                print(f"  SKIP: {res['reason']}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Production target: TPU v5e pods — a 16x16
+(256-chip) pod with axes (data, model), or 2 pods = 512 chips with a
+leading `pod` axis that composes with `data` for cross-pod data parallelism
+(gradient all-reduce crosses the pod axis; model parallelism never does).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1D (data,) mesh — CPU smoke runs."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,179 @@
+"""Production training driver.
+
+Wires every substrate together: config registry, mesh + sharding rules,
+synthetic or token-file data with background prefetch, AdamW + grad-accum
+train step, atomic checkpointing with sample-exact resume, preemption
+handling, straggler watchdog, and optional ELANA energy monitoring of the
+whole run.
+
+    python -m repro.launch.train --arch tinyllama-1.1b --smoke \
+        --steps 100 --batch 8 --seq-len 128 --ckpt-dir /tmp/run1
+
+On a real pod, run one process per host with jax.distributed initialized;
+the mesh comes from ``--mesh production`` (16x16) or ``--mesh host``
+(whatever devices exist — the CPU dev rig).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import energy as energy_lib
+from repro.data.pipeline import Prefetcher
+from repro.data.synthetic import SyntheticConfig, SyntheticDataset, batch_for_model
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as model_lib
+from repro.sharding import partition, rules
+from repro.training import checkpoint as ckpt_lib
+from repro.training import step as step_lib
+from repro.training.fault import PreemptionHandler, RunPosition, StragglerWatchdog
+from repro.training.optimizer import AdamW, warmup_cosine_schedule
+
+
+def build_argparser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="host", choices=["host", "production"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--energy", action="store_true",
+                    help="sample power (ProcStat on CPU) during the run")
+    ap.add_argument("--remat", action="store_true", default=False)
+    return ap
+
+
+def train(args) -> Dict[str, float]:
+    cfg = get_config(args.arch, smoke=args.smoke)
+    mesh = make_production_mesh() if args.mesh == "production" else make_host_mesh()
+    opt = AdamW(schedule=warmup_cosine_schedule(args.lr, args.warmup, args.steps))
+
+    with rules.use_mesh(mesh):
+        state, axes = step_lib.init_state(cfg, opt, jax.random.PRNGKey(args.seed))
+        param_sh = partition.param_shardings(
+            axes, jax.tree.map(lambda x: x, state.params), mesh)
+        train_step = jax.jit(
+            step_lib.make_train_step(cfg, opt, remat=args.remat,
+                                     microbatches=args.microbatches),
+            donate_argnums=(0,),
+        )
+
+        ds = SyntheticDataset(SyntheticConfig(
+            vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+            batch_size=args.batch, seed=args.seed))
+        pos = RunPosition(step=0, data_epoch=0, data_offset=0, rng_seed=args.seed)
+
+        # resume-from-latest (restart / elastic re-mesh path)
+        if args.ckpt_dir and ckpt_lib.latest_step(args.ckpt_dir) is not None:
+            tree = {"params": state.params, "opt_mu": state.opt.mu,
+                    "opt_nu": state.opt.nu}
+            restored, manifest = ckpt_lib.restore(args.ckpt_dir, tree)
+            pos = RunPosition.from_metadata(manifest)
+            from repro.training.optimizer import OptState
+            state = step_lib.TrainState(
+                params=restored["params"],
+                opt=OptState(mu=restored["opt_mu"], nu=restored["opt_nu"],
+                             count=jnp.asarray(pos.step, jnp.int32)),
+                step=jnp.asarray(pos.step, jnp.int32))
+            print(f"resumed from step {pos.step}")
+
+        handler = PreemptionHandler().install()
+        watchdog = StragglerWatchdog(threshold=3.0)
+        monitor = None
+        if args.energy:
+            monitor = energy_lib.PowerMonitor(energy_lib.ProcStatReader())
+            monitor.__enter__()
+
+        rng = np.random.default_rng(args.seed)
+
+        def batches():
+            i = pos.step
+            while True:
+                yield i, batch_for_model(cfg, ds.batch_at(i), rng)
+                i += 1
+
+        it = Prefetcher(batches(), depth=2)
+        losses = []
+        t_start = time.perf_counter()
+        final_step = pos.step
+        for i, host_batch in it:
+            if i >= args.steps or handler.preemption_requested:
+                break
+            batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+            watchdog.start_step()
+            state, metrics = train_step(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            watchdog.end_step(i)
+            losses.append(float(metrics["loss"]))
+            final_step = i + 1
+            if i % args.log_every == 0:
+                print(f"step {i:5d} loss {losses[-1]:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"{watchdog.history[-1].seconds*1e3:.0f}ms", flush=True)
+            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+                ckpt_lib.save(
+                    args.ckpt_dir, i + 1,
+                    {"params": state.params, "opt_mu": state.opt.mu,
+                     "opt_nu": state.opt.nu},
+                    metadata=RunPosition(step=i + 1, data_epoch=0,
+                                         data_offset=i + 1,
+                                         rng_seed=args.seed).to_metadata())
+        it.close()
+
+        # preemption / end-of-run checkpoint
+        if args.ckpt_dir:
+            ckpt_lib.save(
+                args.ckpt_dir, final_step,
+                {"params": state.params, "opt_mu": state.opt.mu,
+                 "opt_nu": state.opt.nu},
+                metadata=RunPosition(step=final_step, data_epoch=0,
+                                     data_offset=final_step,
+                                     rng_seed=args.seed).to_metadata())
+        handler.uninstall()
+        wall = time.perf_counter() - t_start
+
+        out = {
+            "steps": len(losses),
+            "final_step": final_step,
+            "loss_first": losses[0] if losses else float("nan"),
+            "loss_last": losses[-1] if losses else float("nan"),
+            "mean_step_ms": watchdog.mean_step_s * 1e3,
+            "stragglers": watchdog.straggler_count,
+            "wall_s": wall,
+            "preempted": handler.preemption_requested,
+        }
+        if monitor is not None:
+            monitor.__exit__(None, None, None)
+            e = monitor.result()
+            out["avg_watts"] = e.avg_watts
+            out["joules"] = e.joules
+            out["j_per_step"] = e.joules / max(len(losses), 1)
+        return out
+
+
+def main(argv=None) -> int:
+    args = build_argparser().parse_args(argv)
+    out = train(args)
+    print(json.dumps(out, indent=2))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

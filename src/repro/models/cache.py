@@ -1,0 +1,133 @@
+"""Decode-time caches: full KV, ring-buffer (sliding window) KV, recurrent
+state, and cross-attention memory.
+
+A cache entry is a plain dict of arrays so the whole cache is a pytree that
+rides through ``jax.jit`` / ``lax.scan``.  Absolute key positions are stored
+explicitly (``pos``; -1 = unfilled) which makes ring buffers, masking, and
+RoPE-at-write-time uniform across cache kinds.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def init_attn_cache(
+    batch: int,
+    max_len: int,
+    n_kv: int,
+    head_dim: int,
+    dtype,
+    window: int = 0,
+) -> Dict:
+    length = min(window, max_len) if window > 0 else max_len
+    return {
+        "k": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, length, n_kv, head_dim), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),  # per-row positions
+        "ring": jnp.asarray(1 if (window > 0 and window < max_len) else 0, jnp.int32),
+    }
+
+
+def fill_attn_cache(cache: Dict, k: jax.Array, v: jax.Array, positions: jax.Array) -> Dict:
+    """Write a full prefill's K/V (B, S, H, D) into the cache.
+
+    For ring caches only the last ``L`` timesteps are kept.  ``positions`` is
+    (B, S) but all rows are identical in the batched-serving setting; row 0 is
+    used for the slot bookkeeping.
+    """
+    B, S = k.shape[:2]
+    L = cache["k"].shape[1]
+    pos_row = positions[0].astype(jnp.int32)
+    if S >= L:
+        k_tail, v_tail, p_tail = k[:, S - L:], v[:, S - L:], pos_row[S - L:]
+    else:
+        pad = L - S
+        k_tail = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_tail = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        p_tail = jnp.pad(pos_row, (0, pad), constant_values=-1)
+    slots = jnp.where(p_tail >= 0, p_tail % L, jnp.arange(L) % L)
+    k_new = cache["k"].at[:, slots].set(k_tail)
+    v_new = cache["v"].at[:, slots].set(v_tail)
+    pos_new = cache["pos"].at[:, slots].set(p_tail[None, :])
+    return {"k": k_new, "v": v_new, "pos": pos_new, "ring": cache["ring"]}
+
+
+def update_attn_cache(cache: Dict, k_new: jax.Array, v_new: jax.Array,
+                      positions: jax.Array) -> Dict:
+    """Write one decoded token's K/V (B, 1, H, D) at per-row ``positions`` (B,)."""
+    B, L = cache["pos"].shape
+    positions = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (B,))
+    slot = positions % L
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, slot].set(k_new[:, 0])
+    v = cache["v"].at[rows, slot].set(v_new[:, 0])
+    pos = cache["pos"].at[rows, slot].set(positions)
+    return {"k": k, "v": v, "pos": pos, "ring": cache["ring"]}
+
+
+# -- recurrent states --------------------------------------------------------
+
+def init_rglru_state(batch: int, width: int, conv_width: int, dtype) -> Dict:
+    return {
+        "h": jnp.zeros((batch, width), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, width), dtype),
+    }
+
+
+def init_mlstm_state(
+    batch: int, heads: int, dk: int, dv: int, conv_width: int = 0, dtype=jnp.float32
+) -> Dict:
+    st = {
+        "C": jnp.zeros((batch, heads, dk, dv), jnp.float32),
+        "n": jnp.zeros((batch, heads, dk), jnp.float32),
+        "m": jnp.full((batch, heads), -1e30, jnp.float32),
+    }
+    if conv_width > 0:
+        st["conv"] = jnp.zeros((batch, conv_width - 1, heads * dv), dtype)
+    return st
+
+
+def init_slstm_state(batch: int, heads: int, dh: int, conv_width: int, dtype) -> Dict:
+    return {
+        "c": jnp.zeros((batch, heads, dh), jnp.float32),
+        "n": jnp.zeros((batch, heads, dh), jnp.float32),
+        "m": jnp.full((batch, heads, dh), -1e30, jnp.float32),
+        "h": jnp.zeros((batch, heads, dh), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, heads * dh), dtype),
+    }
+
+
+# -- per-block cache constructors -------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype) -> Dict:
+    hd = cfg.resolved_head_dim
+    if kind == "ffn":
+        return {}
+    if kind == "attn":
+        return init_attn_cache(batch, max_len, cfg.num_kv_heads, hd, dtype)
+    if kind == "local_attn":
+        return init_attn_cache(
+            batch, max_len, cfg.num_kv_heads, hd, dtype, window=cfg.sliding_window
+        )
+    if kind == "rglru":
+        return init_rglru_state(
+            batch, cfg.resolved_lru_width, cfg.rglru_conv_width, dtype
+        )
+    if kind == "mlstm":
+        w = int(cfg.d_model * cfg.mlstm_proj_factor)
+        h = cfg.resolved_rec_heads
+        return init_mlstm_state(batch, h, w // h, w // h, cfg.rglru_conv_width, dtype)
+    if kind == "slstm":
+        h = cfg.resolved_rec_heads
+        return init_slstm_state(batch, h, cfg.d_model // h, cfg.rglru_conv_width, dtype)
+    raise ValueError(f"no cache for block kind {kind!r}")
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

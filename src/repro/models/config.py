@@ -1,0 +1,157 @@
+"""Unified model configuration for every supported architecture family.
+
+A single ``ModelConfig`` describes dense decoders, MoE decoders, recurrent
+(xLSTM) stacks, hybrid (RG-LRU + local attention) stacks, encoder-decoder
+models, and multimodal backbones.  The layer stack is expressed as a
+``block_pattern`` that tiles across ``num_layers`` (e.g. RecurrentGemma's
+``('rglru', 'rglru', 'local_attn')``), which is what lets one scan-based
+model implementation cover all ten assigned architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+# Block kinds understood by models/model.py.
+BLOCK_KINDS = ("attn", "local_attn", "ffn", "rglru", "mlstm", "slstm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # -- identity -----------------------------------------------------------
+    name: str = "unnamed"
+    family: str = "dense"  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    source: str = ""       # citation string from the assignment table
+
+    # -- trunk dimensions ---------------------------------------------------
+    num_layers: int = 2
+    d_model: int = 128
+    num_heads: int = 2
+    num_kv_heads: int = 2
+    head_dim: int = 0            # 0 -> d_model // num_heads
+    d_ff: int = 256
+    vocab_size: int = 512
+
+    # -- layer stack --------------------------------------------------------
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # -- attention ----------------------------------------------------------
+    qkv_bias: bool = False       # Qwen1.5-style bias on Q/K/V projections
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0      # 0 -> global attention; used by local_attn
+    logit_softcap: float = 0.0   # tanh soft-capping (gemma-style); 0 = off
+
+    # -- MLP / MoE ----------------------------------------------------------
+    mlp_act: str = "silu"        # silu (SwiGLU) | gelu (GeGLU) | relu2 (Nemotron)
+    mlp_gated: bool = True       # False -> classic 2-matrix FFN
+    parallel_block: bool = False  # Cohere/GPT-J style: x + attn(h) + mlp(h)
+    num_experts: int = 0         # 0 -> dense MLP
+    num_experts_per_tok: int = 0
+    moe_capacity_factor: float = 1.25
+    num_shared_experts: int = 0  # DeepSeek/Moonlight-style always-on experts
+
+    # -- recurrent (rglru / xlstm) -----------------------------------------
+    rec_heads: int = 0           # heads for recurrent cells (0 -> num_heads)
+    rglru_conv_width: int = 4    # temporal conv in the Griffin recurrent block
+    lru_width: int = 0           # 0 -> d_model
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    recurrent_chunk: int = 256   # chunked-scan length for train/prefill
+
+    # -- encoder-decoder ----------------------------------------------------
+    num_encoder_layers: int = 0  # >0 -> enc-dec model (seamless-m4t)
+    encoder_d_ff: int = 0        # 0 -> d_ff
+
+    # -- multimodal stubs ---------------------------------------------------
+    num_vision_tokens: int = 0   # llava: patch embeddings prepended to seq
+    audio_frontend: bool = False # seamless: encoder input is frame embeddings
+
+    # -- embedding / misc ---------------------------------------------------
+    tie_embeddings: bool = True
+    emb_scale: bool = False      # multiply embeddings by sqrt(d_model)
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------ api
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_lru_width(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def resolved_rec_heads(self) -> int:
+        return self.rec_heads or self.num_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.num_encoder_layers > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def blocks(self) -> Tuple[str, ...]:
+        """The concrete per-layer block kinds, pattern tiled to num_layers."""
+        pat = self.block_pattern
+        reps = math.ceil(self.num_layers / len(pat))
+        return tuple((pat * reps)[: self.num_layers])
+
+    def layer_groups(self) -> Tuple[int, int]:
+        """(n_full_groups, n_remainder_layers) for scan-over-groups."""
+        plen = len(self.block_pattern)
+        return self.num_layers // plen, self.num_layers % plen
+
+    def validate(self) -> "ModelConfig":
+        assert self.num_heads % self.num_kv_heads == 0, (
+            f"{self.name}: num_heads={self.num_heads} not divisible by "
+            f"num_kv_heads={self.num_kv_heads}"
+        )
+        for kind in self.block_pattern:
+            assert kind in BLOCK_KINDS, f"{self.name}: unknown block {kind!r}"
+        if self.is_moe:
+            assert self.num_experts_per_tok > 0
+        if "local_attn" in self.block_pattern:
+            assert self.sliding_window > 0, f"{self.name}: local_attn needs window"
+        return self
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw).validate()
+
+    # Does every attention block have bounded (sub-quadratic) context?
+    @property
+    def subquadratic(self) -> bool:
+        blocks = set(self.blocks()) - {"ffn"}
+        if "attn" in blocks:
+            return False
+        if "local_attn" in blocks:
+            return self.sliding_window > 0
+        return True  # pure recurrent
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned (workload) input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+    microbatches: int = 1  # gradient-accumulation splits for train
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}

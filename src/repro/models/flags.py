@@ -1,0 +1,49 @@
+"""Trace-time flags threaded through the model code.
+
+``unroll_scans`` — replace ``lax.scan`` over layer groups (and the mLSTM
+chunk scan) with unrolled loops.  XLA's cost analysis visits a ``while``
+body once, so the multi-pod dry-run lowers an unrolled variant to extract
+exact whole-program FLOPs (the scan variant is what actually compiles/runs).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+
+class _Flags(threading.local):
+    def __init__(self):
+        self.unroll_scans = False
+        self.moe_blocked = False
+
+
+_FLAGS = _Flags()
+
+
+def unroll_scans() -> bool:
+    return _FLAGS.unroll_scans
+
+
+@contextlib.contextmanager
+def use_unroll(value: bool = True):
+    prev = _FLAGS.unroll_scans
+    _FLAGS.unroll_scans = value
+    try:
+        yield
+    finally:
+        _FLAGS.unroll_scans = prev
+
+
+def moe_blocked() -> bool:
+    return _FLAGS.moe_blocked
+
+
+@contextlib.contextmanager
+def use_moe_blocked(value: bool = True):
+    prev = _FLAGS.moe_blocked
+    _FLAGS.moe_blocked = value
+    try:
+        yield
+    finally:
+        _FLAGS.moe_blocked = prev

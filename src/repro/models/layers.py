@@ -1,0 +1,148 @@
+"""Parameter construction + elementary layers (pure JAX, no flax).
+
+Parameters are nested dicts of ``jax.Array``.  During construction each leaf
+is created through a ``Maker``, which records the *logical sharding axes* of
+every parameter in a parallel tree.  ``split_params`` separates the two so
+callers get ``(params, axes_tree)`` — the axes tree feeds
+``sharding.rules.tree_pspecs`` to produce in_shardings for pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import shard
+
+
+@dataclasses.dataclass
+class P:
+    """Temporary param leaf: value + logical axes (split off after init)."""
+
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+
+def _is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def split_params(tree) -> Tuple[Any, Any]:
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_p)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_p)
+    return params, axes
+
+
+class Maker:
+    """Splittable PRNG + initializer helper."""
+
+    def __init__(self, key: jax.Array, dtype: jnp.dtype):
+        self._key = key
+        self.dtype = dtype
+
+    def fork(self) -> "Maker":
+        self._key, sub = jax.random.split(self._key)
+        return Maker(sub, self.dtype)
+
+    def _next(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def normal(self, shape, axes, scale: Optional[float] = None) -> P:
+        if scale is None:  # fan-in scaling on the first (input) dim
+            scale = 1.0 / math.sqrt(max(1, shape[0]))
+        v = jax.random.normal(self._next(), shape, jnp.float32) * scale
+        return P(v.astype(self.dtype), tuple(axes))
+
+    def zeros(self, shape, axes) -> P:
+        return P(jnp.zeros(shape, self.dtype), tuple(axes))
+
+    def ones(self, shape, axes) -> P:
+        return P(jnp.ones(shape, self.dtype), tuple(axes))
+
+    def const(self, value: jax.Array, axes) -> P:
+        return P(value.astype(self.dtype), tuple(axes))
+
+
+# --------------------------------------------------------------------------
+# elementary ops
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def make_norm(mk: Maker, d: int) -> Dict[str, P]:
+    return {"scale": mk.zeros((d,), ("act_embed",))}
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    return rms_norm(x, p["scale"], eps)
+
+
+# -- rotary embeddings ------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with positions (..., S) broadcastable."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- activations ------------------------------------------------------------
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # Primer / Nemotron
+    }[name]
+
+
+# -- embedding --------------------------------------------------------------
+
+def make_embedding(mk: Maker, vocab: int, d: int) -> Dict[str, P]:
+    return {"table": mk.normal((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed_tokens(p, tokens: jax.Array, scale: bool, d_model: int) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(math.sqrt(d_model), x.dtype)
+    return shard(x, "batch", None, "act_embed")
+
+
+def unembed(p, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum(
+        "...d,vd->...v", x, p["table"], preferred_element_type=jnp.float32
+    )
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return shard(logits, "batch", None, "vocab_out")

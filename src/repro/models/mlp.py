@@ -1,0 +1,30 @@
+"""MLP blocks: gated (SwiGLU/GeGLU) and classic 2-matrix (ReLU²/ReLU) FFNs."""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.models.layers import Maker, act_fn, shard
+
+
+def make_mlp(mk: Maker, d: int, d_ff: int, gated: bool = True) -> Dict:
+    p = {
+        "wg": mk.normal((d, d_ff), ("embed", "ffn")),
+        "wd": mk.normal((d_ff, d), ("ffn", "embed"), scale=1.0 / math.sqrt(d_ff)),
+    }
+    if gated:
+        p["wu"] = mk.normal((d, d_ff), ("embed", "ffn"))
+    return p
+
+
+def apply_mlp(p: Dict, x, act: str = "silu"):
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    h = act_fn(act)(g)
+    if "wu" in p:
+        h = h * jnp.einsum("bsd,df->bsf", x, p["wu"])
+    h = shard(h, "batch", None, "act_ffn")
+    y = jnp.einsum("bsf,fd->bsd", h, p["wd"])
+    return shard(y, "batch", None, "act_embed")

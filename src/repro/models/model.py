@@ -1,0 +1,507 @@
+"""The unified decoder / encoder-decoder model.
+
+One implementation covers all ten assigned architectures: the layer stack is
+``cfg.block_pattern`` tiled across ``num_layers``; full pattern repetitions
+are executed under ``jax.lax.scan`` (params stacked on a leading `layers`
+axis — keeps the HLO size O(pattern) instead of O(num_layers), which is what
+makes the 64-layer 104B dry-run compile in minutes), remainder layers are
+unrolled.
+
+Three entry points per model:
+  * ``forward_train``  — full-sequence teacher-forced logits.
+  * ``prefill``        — same math, but fills and returns the decode cache.
+  * ``decode_step``    — one token against the cache (the TPOT step).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_lib
+from repro.models import cache as cache_lib
+from repro.models import flags
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    Maker, apply_norm, embed_tokens, make_embedding, make_norm, shard,
+    split_params, unembed,
+)
+from repro.models.mlp import apply_mlp, make_mlp
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def _make_block(mk: Maker, cfg: ModelConfig, kind: str, *, decoder: bool) -> Dict:
+    d = cfg.d_model
+    if kind in ("attn", "local_attn"):
+        p = {
+            "norm1": make_norm(mk.fork(), d),
+            "attn": attn_lib.make_attention(mk.fork(), cfg),
+            "norm2": make_norm(mk.fork(), d),
+            "mlp": (moe_lib.make_moe(mk.fork(), cfg) if cfg.is_moe
+                    else make_mlp(mk.fork(), d, cfg.d_ff, cfg.mlp_gated)),
+        }
+        if cfg.parallel_block:
+            del p["norm2"]  # single shared pre-norm (Cohere/GPT-J style)
+        if cfg.is_encdec and decoder:
+            p["norm_c"] = make_norm(mk.fork(), d)
+            p["cross"] = attn_lib.make_attention(mk.fork(), cfg, cross=True)
+        return p
+    if kind == "ffn":
+        return {
+            "norm": make_norm(mk.fork(), d),
+            "mlp": make_mlp(mk.fork(), d, cfg.d_ff, cfg.mlp_gated),
+        }
+    if kind == "rglru":
+        return {
+            "norm1": make_norm(mk.fork(), d),
+            "rec": rec_lib.make_rglru_block(mk.fork(), cfg),
+            "norm2": make_norm(mk.fork(), d),
+            "mlp": make_mlp(mk.fork(), d, cfg.d_ff, cfg.mlp_gated),
+        }
+    if kind == "mlstm":
+        return {"norm": make_norm(mk.fork(), d),
+                "cell": rec_lib.make_mlstm_block(mk.fork(), cfg)}
+    if kind == "slstm":
+        return {"norm": make_norm(mk.fork(), d),
+                "cell": rec_lib.make_slstm_block(mk.fork(), cfg)}
+    raise ValueError(kind)
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Encoder trunk config (dense MLP, full attention, own d_ff)."""
+    return cfg.replace(
+        block_pattern=("attn",),
+        num_layers=cfg.num_encoder_layers,
+        d_ff=cfg.encoder_d_ff or cfg.d_ff,
+        num_experts=0, num_experts_per_tok=0,
+        num_encoder_layers=0,
+    )
+
+
+def _make_stack(key: jax.Array, cfg: ModelConfig, *, decoder: bool):
+    """Returns (params, axes) for a layer stack (scan groups + remainder)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    pattern = cfg.block_pattern
+    n_groups, n_rest = cfg.layer_groups()
+    keys = jax.random.split(key, 3)
+
+    def build_group(k):
+        mk = Maker(k, dtype)
+        return {
+            str(i): _make_block(mk.fork(), cfg, kind, decoder=decoder)
+            for i, kind in enumerate(pattern)
+        }
+
+    params: Dict[str, Any] = {}
+    axes: Dict[str, Any] = {}
+    if n_groups > 0:
+        gkeys = jax.random.split(keys[0], n_groups)
+        params["groups"] = jax.vmap(
+            lambda k: split_params(build_group(k))[0]
+        )(gkeys)
+        g_axes = split_params(build_group(keys[0]))[1]
+        axes["groups"] = jax.tree.map(
+            lambda ax: ("layers", *ax), g_axes,
+            is_leaf=lambda l: isinstance(l, tuple) and all(
+                isinstance(a, (str, type(None))) for a in l),
+        )
+    if n_rest > 0:
+        mk = Maker(keys[1], dtype)
+        rest = {
+            str(i): _make_block(mk.fork(), cfg, kind, decoder=decoder)
+            for i, kind in enumerate(pattern[:n_rest])
+        }
+        params["rest"], axes["rest"] = split_params(rest)
+    fn, fn_axes = split_params({"final_norm": make_norm(Maker(keys[2], dtype), cfg.d_model)})
+    params.update(fn)
+    axes.update(fn_axes)
+    return params, axes
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Tuple[Dict, Dict]:
+    """Build params + logical-axes trees."""
+    cfg.validate()
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_dec, k_enc = jax.random.split(key, 3)
+    emb_tree = {"embed": make_embedding(Maker(k_emb, dtype), cfg.vocab_size, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        k_emb2 = jax.random.fold_in(k_emb, 1)
+        emb_tree["lm_head"] = make_embedding(Maker(k_emb2, dtype), cfg.vocab_size, cfg.d_model)
+    emb, emb_axes = split_params(emb_tree)
+    params, axes = dict(emb), dict(emb_axes)
+    dec_p, dec_a = _make_stack(k_dec, cfg, decoder=True)
+    params["decoder"], axes["decoder"] = dec_p, dec_a
+    if cfg.is_encdec:
+        enc_p, enc_a = _make_stack(k_enc, _enc_cfg(cfg), decoder=False)
+        params["encoder"], axes["encoder"] = enc_p, enc_a
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_block_seq(
+    p: Dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    positions: jax.Array,
+    cache_entry: Optional[Dict],
+    memory: Optional[jax.Array],
+    *,
+    causal: bool,
+    fill_cache: bool,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full-sequence block (train / prefill / encoder)."""
+    new_entry: Optional[Dict] = None
+    if kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if kind == "local_attn" else 0
+        h = apply_norm(p["norm1"], x, cfg.norm_eps)
+        if fill_cache:
+            a, self_cache = attn_lib.apply_attention_prefill(
+                p["attn"], h, cfg, positions, cache_entry["self"], window=window
+            )
+            new_entry = {"self": self_cache}
+        else:
+            a = attn_lib.apply_attention_train(
+                p["attn"], h, cfg, positions, causal=causal, window=window
+            )
+        mlp_in = h if cfg.parallel_block else None
+        x = x + a
+        if "cross" in p:
+            h = apply_norm(p["norm_c"], x, cfg.norm_eps)
+            mem_kv = attn_lib.precompute_cross_kv(p["cross"], memory, cfg)
+            if fill_cache and new_entry is not None:
+                new_entry["cross_k"], new_entry["cross_v"] = mem_kv
+            x = x + attn_lib.apply_cross_attention(p["cross"], h, cfg, mem_kv)
+        if mlp_in is None:
+            mlp_in = apply_norm(p["norm2"], x, cfg.norm_eps)
+        moe_fn = (moe_lib.apply_moe_blocked if flags.moe_blocked()
+                  else moe_lib.apply_moe)
+        x = x + (moe_fn(p["mlp"], mlp_in, cfg) if cfg.is_moe
+                 else apply_mlp(p["mlp"], mlp_in, cfg.mlp_act))
+        return x, new_entry
+
+    if kind == "ffn":
+        h = apply_norm(p["norm"], x, cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, cfg.mlp_act)
+        return x, ({} if fill_cache else None)
+
+    if kind == "rglru":
+        h = apply_norm(p["norm1"], x, cfg.norm_eps)
+        y, st = rec_lib.apply_rglru_seq(
+            p["rec"], h, cfg, cache_entry if fill_cache else None
+        )
+        x = x + y
+        h = apply_norm(p["norm2"], x, cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, cfg.mlp_act)
+        return x, (st if fill_cache else None)
+
+    if kind in ("mlstm", "slstm"):
+        h = apply_norm(p["norm"], x, cfg.norm_eps)
+        fn = rec_lib.apply_mlstm_seq if kind == "mlstm" else rec_lib.apply_slstm_seq
+        y, st = fn(p["cell"], h, cfg, cache_entry if fill_cache else None)
+        return x + y, (st if fill_cache else None)
+
+    raise ValueError(kind)
+
+
+def _apply_block_decode(
+    p: Dict,
+    cfg: ModelConfig,
+    kind: str,
+    x: jax.Array,
+    position: jax.Array,
+    cache_entry: Dict,
+) -> Tuple[jax.Array, Dict]:
+    if kind in ("attn", "local_attn"):
+        window = cfg.sliding_window if kind == "local_attn" else 0
+        h = apply_norm(p["norm1"], x, cfg.norm_eps)
+        a, self_cache = attn_lib.apply_attention_decode(
+            p["attn"], h, cfg, position, cache_entry["self"], window=window
+        )
+        new_entry = dict(cache_entry)
+        new_entry["self"] = self_cache
+        mlp_in = h if cfg.parallel_block else None
+        x = x + a
+        if "cross" in p:
+            h = apply_norm(p["norm_c"], x, cfg.norm_eps)
+            mem_kv = (cache_entry["cross_k"], cache_entry["cross_v"])
+            x = x + attn_lib.apply_cross_attention(p["cross"], h, cfg, mem_kv)
+        if mlp_in is None:
+            mlp_in = apply_norm(p["norm2"], x, cfg.norm_eps)
+        moe_fn = (moe_lib.apply_moe_blocked if flags.moe_blocked()
+                  else moe_lib.apply_moe)
+        x = x + (moe_fn(p["mlp"], mlp_in, cfg) if cfg.is_moe
+                 else apply_mlp(p["mlp"], mlp_in, cfg.mlp_act))
+        return x, new_entry
+
+    if kind == "ffn":
+        h = apply_norm(p["norm"], x, cfg.norm_eps)
+        return x + apply_mlp(p["mlp"], h, cfg.mlp_act), {}
+
+    if kind == "rglru":
+        h = apply_norm(p["norm1"], x, cfg.norm_eps)
+        y, st = rec_lib.apply_rglru_step(p["rec"], h, cfg, cache_entry)
+        x = x + y
+        h = apply_norm(p["norm2"], x, cfg.norm_eps)
+        x = x + apply_mlp(p["mlp"], h, cfg.mlp_act)
+        return x, st
+
+    if kind in ("mlstm", "slstm"):
+        h = apply_norm(p["norm"], x, cfg.norm_eps)
+        fn = rec_lib.apply_mlstm_step if kind == "mlstm" else rec_lib.apply_slstm_step
+        y, st = fn(p["cell"], h, cfg, cache_entry)
+        return x + y, st
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stack application
+# ---------------------------------------------------------------------------
+
+def _apply_stack_seq(
+    stack: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Optional[Dict],
+    memory: Optional[jax.Array],
+    *,
+    causal: bool,
+    remat: bool,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    pattern = cfg.block_pattern
+    fill = cache is not None
+    n_groups, n_rest = cfg.layer_groups()
+
+    def group_body(x, group_params, group_cache):
+        new_cache = {}
+        for i, kind in enumerate(pattern):
+            entry = group_cache[str(i)] if fill else None
+            x, new_entry = _apply_block_seq(
+                group_params[str(i)], cfg, kind, x, positions, entry, memory,
+                causal=causal, fill_cache=fill,
+            )
+            if fill:
+                new_cache[str(i)] = new_entry
+        return x, (new_cache if fill else None)
+
+    if remat:
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+
+    new_cache_tree: Dict[str, Any] = {}
+    if n_groups > 0:
+        def scan_fn(x, xs):
+            gp, gc = xs
+            x, nc = group_body(x, gp, gc if fill else None)
+            return x, nc
+
+        xs = (stack["groups"], cache["groups"] if fill else None)
+        if not fill:
+            xs = (stack["groups"], jnp.zeros((n_groups,), jnp.int32))
+        if flags.unroll_scans():
+            caches = []
+            for g in range(n_groups):
+                x, nc = scan_fn(x, jax.tree.map(lambda t: t[g], xs))
+                caches.append(nc)
+            group_caches = (jax.tree.map(lambda *ts: jnp.stack(ts), *caches)
+                            if fill else None)
+        else:
+            x, group_caches = jax.lax.scan(scan_fn, x, xs)
+        if fill:
+            new_cache_tree["groups"] = group_caches
+    if n_rest > 0:
+        new_rest = {}
+        for i, kind in enumerate(pattern[:n_rest]):
+            entry = cache["rest"][str(i)] if fill else None
+            x, new_entry = _apply_block_seq(
+                stack["rest"][str(i)], cfg, kind, x, positions, entry, memory,
+                causal=causal, fill_cache=fill,
+            )
+            if fill:
+                new_rest[str(i)] = new_entry
+        if fill:
+            new_cache_tree["rest"] = new_rest
+    x = apply_norm(stack["final_norm"], x, cfg.norm_eps)
+    return x, (new_cache_tree if fill else None)
+
+
+def _apply_stack_decode(
+    stack: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    position: jax.Array,
+    cache: Dict,
+) -> Tuple[jax.Array, Dict]:
+    pattern = cfg.block_pattern
+    n_groups, n_rest = cfg.layer_groups()
+    new_cache: Dict[str, Any] = {}
+    if n_groups > 0:
+        def scan_fn(x, xs):
+            gp, gc = xs
+            nc = {}
+            for i, kind in enumerate(pattern):
+                x, nc[str(i)] = _apply_block_decode(
+                    gp[str(i)], cfg, kind, x, position, gc[str(i)]
+                )
+            return x, nc
+
+        xs = (stack["groups"], cache["groups"])
+        if flags.unroll_scans():
+            caches = []
+            for g in range(n_groups):
+                x, nc = scan_fn(x, jax.tree.map(lambda t: t[g], xs))
+                caches.append(nc)
+            group_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *caches)
+        else:
+            x, group_caches = jax.lax.scan(scan_fn, x, xs)
+        new_cache["groups"] = group_caches
+    if n_rest > 0:
+        nr = {}
+        for i, kind in enumerate(pattern[:n_rest]):
+            x, nr[str(i)] = _apply_block_decode(
+                stack["rest"][str(i)], cfg, kind, x, position, cache["rest"][str(i)]
+            )
+        new_cache["rest"] = nr
+    x = apply_norm(stack["final_norm"], x, cfg.norm_eps)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# embedding frontends
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict) -> jax.Array:
+    """Token embedding, with the VLM patch-prefix stub when configured."""
+    x = embed_tokens(params["embed"], batch["tokens"], cfg.emb_scale, cfg.d_model)
+    if cfg.num_vision_tokens > 0 and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(x.dtype)  # (B, N_img, d) precomputed
+        x = jnp.concatenate([ve, x], axis=1)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(
+    cfg: ModelConfig, params: Dict, batch: Dict, *, remat: bool = True
+) -> jax.Array:
+    """Teacher-forced logits (B, S, vocab).
+
+    batch: tokens (B, S) [+ vision_embeds (B, N, d)] [+ enc_embeds (B, T, d)].
+    """
+    x = _embed_inputs(cfg, params, batch)
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]
+    )
+    memory = None
+    if cfg.is_encdec:
+        enc_x = batch["enc_embeds"].astype(x.dtype)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_x.shape[1], dtype=jnp.int32)[None], enc_x.shape[:2]
+        )
+        memory, _ = _apply_stack_seq(
+            params["encoder"], _enc_cfg(cfg), enc_x, enc_pos, None, None,
+            causal=False, remat=remat,
+        )
+    x, _ = _apply_stack_seq(
+        params["decoder"], cfg, x, positions, None, memory,
+        causal=True, remat=remat,
+    )
+    return unembed(params.get("lm_head", params["embed"]), x, cfg.logit_softcap)
+
+
+def param_axes(cfg: ModelConfig):
+    """(param ShapeDtypeStruct tree, logical-axes tree) — no allocation."""
+    captured = {}
+
+    def f(key):
+        params, axes = init(cfg, key)
+        captured["axes"] = axes
+        return params
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, captured["axes"]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    """Decode cache for the decoder stack (stacked to mirror param groups)."""
+    pattern = cfg.block_pattern
+    n_groups, n_rest = cfg.layer_groups()
+
+    def entry(kind):
+        c = cache_lib.init_block_cache(cfg, kind, batch, max_len, dtype)
+        if kind in ("attn", "local_attn"):
+            c = {"self": c}
+            if cfg.is_encdec:
+                t_mem = max_len // 2 if max_len > 1 else 1
+                hd = cfg.resolved_head_dim
+                c["cross_k"] = jnp.zeros((batch, t_mem, cfg.num_kv_heads, hd), dtype)
+                c["cross_v"] = jnp.zeros((batch, t_mem, cfg.num_kv_heads, hd), dtype)
+        return c
+
+    cache: Dict[str, Any] = {}
+    if n_groups > 0:
+        cache["groups"] = {
+            str(i): jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_groups, *a.shape)).copy(),
+                entry(kind),
+            )
+            for i, kind in enumerate(pattern)
+        }
+    if n_rest > 0:
+        cache["rest"] = {str(i): entry(kind) for i, kind in enumerate(pattern[:n_rest])}
+    return cache
+
+
+def prefill(
+    cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict, *, remat: bool = False
+) -> Tuple[jax.Array, Dict]:
+    """Process the prompt, fill the cache; returns last-position logits."""
+    x = _embed_inputs(cfg, params, batch)
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]
+    )
+    memory = None
+    if cfg.is_encdec:
+        enc_x = batch["enc_embeds"].astype(x.dtype)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_x.shape[1], dtype=jnp.int32)[None], enc_x.shape[:2]
+        )
+        memory, _ = _apply_stack_seq(
+            params["encoder"], _enc_cfg(cfg), enc_x, enc_pos, None, None,
+            causal=False, remat=remat,
+        )
+    x, new_cache = _apply_stack_seq(
+        params["decoder"], cfg, x, positions, cache, memory,
+        causal=True, remat=remat,
+    )
+    logits = unembed(params.get("lm_head", params["embed"]), x[:, -1:],
+                     cfg.logit_softcap)[:, 0]
+    return logits, new_cache
+
+
+def decode_step(
+    cfg: ModelConfig, params: Dict, token: jax.Array, position: jax.Array, cache: Dict
+) -> Tuple[jax.Array, Dict]:
+    """One decode step.  token (B, 1) int32; position scalar or (B,) int32."""
+    position = jnp.broadcast_to(
+        jnp.asarray(position, jnp.int32), (token.shape[0],))
+    x = embed_tokens(params["embed"], token, cfg.emb_scale, cfg.d_model)
+    x, new_cache = _apply_stack_decode(params["decoder"], cfg, x, position, cache)
+    logits = unembed(params.get("lm_head", params["embed"]), x, cfg.logit_softcap)[:, 0]
+    return logits, new_cache

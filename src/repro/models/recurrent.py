@@ -1,0 +1,369 @@
+"""Recurrent blocks: Griffin RG-LRU (RecurrentGemma) and xLSTM (mLSTM/sLSTM).
+
+Each block exposes two entry points:
+  * ``apply_*_seq``  — full-sequence (train / prefill): chunked-parallel where
+    the math allows (RG-LRU associative scan, mLSTM chunkwise), sequential
+    ``lax.scan`` where it does not (sLSTM's nonlinear recurrence);
+    returns (y, final_state).
+  * ``apply_*_step`` — single-token decode against a carried state.
+
+States are the cache pytrees from ``models/cache.py``; all recurrences are
+carried in fp32 with log-space max-stabilizers (the xLSTM formulation).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch
+from repro.models import flags
+from repro.models.config import ModelConfig
+from repro.models.layers import Maker, act_fn, rms_norm, shard
+
+_LOG_EPS = -1e30
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x: jax.Array, w: jax.Array, history: jax.Array = None):
+    """Depthwise causal conv, width K, via shifted adds.
+
+    x: (B, S, W); w: (K, W).  ``history``: (B, K-1, W) previous inputs (decode
+    / chunk boundary).  Returns (y, new_history).
+    """
+    K = w.shape[0]
+    B, S, W = x.shape
+    if history is None:
+        history = jnp.zeros((B, K - 1, W), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)  # (B, S+K-1, W)
+    y = jnp.zeros_like(x)
+    for i in range(K):
+        y = y + xp[:, i : i + S] * w[K - 1 - i]
+    new_hist = xp[:, S:, :] if K > 1 else history
+    return y, new_hist
+
+
+def _block_diag_linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., H*Dh) @ block-diagonal w: (H, Dh, Do) -> (..., H*Do)."""
+    H, Dh, Do = w.shape
+    xh = x.reshape(*x.shape[:-1], H, Dh)
+    y = jnp.einsum("...hd,hdo->...ho", xh, w)
+    return y.reshape(*x.shape[:-1], H * Do)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ---------------------------------------------------------------------------
+
+def make_rglru_block(mk: Maker, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    W = cfg.resolved_lru_width
+    H = cfg.resolved_rec_heads
+    Dh = W // H
+    # Λ init so that a = exp(-8*softplus(λ)) lands in [0.9, 0.999] (Griffin).
+    import numpy as np
+
+    u = np.random.RandomState(0).uniform(0.9 ** 2, 0.999 ** 2, size=(W,))
+    lam = np.log(np.expm1(-np.log(u) / (2 * 8.0)))  # inverse softplus
+    return {
+        "in_x": mk.normal((d, W), ("embed", "lru")),       # recurrent branch
+        "in_g": mk.normal((d, W), ("embed", "lru")),       # gate branch
+        "conv_w": mk.normal((cfg.rglru_conv_width, W), ("conv", "lru"), scale=0.1),
+        "gate_a": mk.normal((H, Dh, Dh), (None, "lru", None), scale=1.0 / math.sqrt(Dh)),
+        "gate_x": mk.normal((H, Dh, Dh), (None, "lru", None), scale=1.0 / math.sqrt(Dh)),
+        "lambda": mk.const(jnp.asarray(lam, jnp.float32), ("lru",)),
+        "out": mk.normal((W, d), ("lru", "embed"), scale=1.0 / math.sqrt(W)),
+    }
+
+
+def _rglru_gates(p, xc: jax.Array):
+    """Per-timestep decay a (fp32) and gated input, from conv'd branch xc."""
+    r = jax.nn.sigmoid(_block_diag_linear(xc, p["gate_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_diag_linear(xc, p["gate_x"]).astype(jnp.float32))
+    log_a = -8.0 * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalization (Griffin eq. 4)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    b = beta * (i * xc.astype(jnp.float32))
+    return a, b
+
+
+def apply_rglru_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict]:
+    from repro.models import cache as cache_lib
+
+    B, S, d = x.shape
+    W = cfg.resolved_lru_width
+    if state is None:
+        state = cache_lib.init_rglru_state(B, W, cfg.rglru_conv_width, x.dtype)
+    g = act_fn("gelu")(jnp.einsum("bsd,dw->bsw", x, p["in_g"]))
+    xr = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
+    xr = shard(xr, "batch", None, "act_ffn")
+    xc, conv_hist = _causal_conv(xr, p["conv_w"], state["conv"])
+    a, b = _rglru_gates(p, xc)
+    h = dispatch.linear_recurrence(a, b, state["h"])  # (B, S, W) fp32
+    y = (h.astype(x.dtype) * g)
+    y = jnp.einsum("bsw,wd->bsd", y, p["out"])
+    new_state = {"h": h[:, -1], "conv": conv_hist}
+    return shard(y, "batch", None, "act_embed"), new_state
+
+
+def apply_rglru_step(p, x, cfg: ModelConfig, state) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d) single decode step."""
+    y, new_state = apply_rglru_seq(p, x, cfg, state)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell, chunkwise-parallel)
+# ---------------------------------------------------------------------------
+
+def make_mlstm_block(mk: Maker, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    W = int(d * cfg.mlstm_proj_factor)
+    H = cfg.resolved_rec_heads
+    return {
+        "up_u": mk.normal((d, W), ("embed", "ffn")),
+        "up_z": mk.normal((d, W), ("embed", "ffn")),
+        "conv_w": mk.normal((cfg.rglru_conv_width, W), ("conv", "ffn"), scale=0.1),
+        "wq": mk.normal((H, W // H, W // H), (None, "ffn", None),
+                        scale=1.0 / math.sqrt(W // H)),
+        "wk": mk.normal((H, W // H, W // H), (None, "ffn", None),
+                        scale=1.0 / math.sqrt(W // H)),
+        "wv": mk.normal((H, W // H, W // H), (None, "ffn", None),
+                        scale=1.0 / math.sqrt(W // H)),
+        "w_i": mk.normal((W, H), ("ffn", None), scale=0.01),
+        "b_i": mk.zeros((H,), (None,)),
+        "w_f": mk.normal((W, H), ("ffn", None), scale=0.01),
+        "b_f": mk.const(jnp.linspace(3.0, 6.0, H), (None,)),  # long-memory init
+        "norm_scale": mk.zeros((W,), ("ffn",)),
+        "down": mk.normal((W, d), ("ffn", "embed"), scale=1.0 / math.sqrt(W)),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, state, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B, S, H, D) fp32;  log_i/log_f: (B, S, H) fp32.
+    state: dict(C (B,H,D,D), n (B,H,D), m (B,H)).
+    Returns h (B, S, H, D) fp32 and final state.
+    """
+    B, S, H, D = q.shape
+    L = min(chunk, S)
+    S_orig = S
+    if S % L:
+        # pad to a chunk multiple with identity steps: log_f=0 (keep state),
+        # log_i=-2e30 (< the -1e30 initial stabilizer, so pads contribute 0)
+        pad = L - S % L
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        log_f = zpad(log_f)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-2e30)
+        S = S + pad
+    N = S // L
+
+    def per_chunk(carry, xs):
+        C, n, m = carry                       # (B,H,D,D), (B,H,D), (B,H)
+        qc, kc, vc, li, lf = xs               # (B,L,H,D) / (B,L,H)
+        qc = jnp.swapaxes(qc, 1, 2)           # (B,H,L,D)
+        kc = jnp.swapaxes(kc, 1, 2)
+        vc = jnp.swapaxes(vc, 1, 2)
+        li = jnp.swapaxes(li, 1, 2)           # (B,H,L)
+        lf = jnp.swapaxes(lf, 1, 2)
+        b = jnp.cumsum(lf, axis=-1)           # inclusive log-decay to t
+        a = li - b                            # a_s = log_i_s - b_s
+        cummax_a = jax.lax.cummax(a, axis=a.ndim - 1)
+        mm = jnp.maximum(m[..., None], cummax_a)          # (B,H,L)
+        m_t = b + mm
+        # intra-chunk scores
+        scale = 1.0 / math.sqrt(D)
+        s_qk = jnp.einsum("bhld,bhmd->bhlm", qc, kc) * scale
+        decay = a[:, :, None, :] - mm[:, :, :, None]      # (B,H,L(t),L(s))
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w_intra = jnp.where(causal, jnp.exp(decay), 0.0)
+        s_w = s_qk * w_intra
+        h_intra = jnp.einsum("bhlm,bhmd->bhld", s_w, vc)
+        n_intra = jnp.einsum("bhlm,bhmd->bhld", w_intra, kc)  # normalizer state at t
+        # inter-chunk (carry) contribution
+        w_inter = jnp.exp(m[..., None] - mm)              # (B,H,L)
+        h_inter = jnp.einsum("bhld,bhde->bhle", qc * scale, C) * w_inter[..., None]
+        num = h_intra + h_inter
+        # denominator: |q·n_t| with n_t the stabilized normalizer state at t
+        n_at_t = n_intra + n[:, :, None, :] * w_inter[..., None]
+        denom = jnp.abs(jnp.einsum("bhld,bhld->bhl", qc * scale, n_at_t))
+        denom = jnp.maximum(denom, jnp.exp(-m_t))
+        h = num / denom[..., None]
+        # end-of-chunk state
+        g = b[..., -1]                                    # (B,H)
+        m_next = m_t[..., -1]
+        w_c = jnp.exp(g[..., None] + a - m_next[..., None])          # (B,H,L)
+        C_next = (
+            jnp.exp(g + m - m_next)[..., None, None] * C
+            + jnp.einsum("bhl,bhld,bhle->bhde", w_c, kc, vc)
+        )
+        n_next = (
+            jnp.exp(g + m - m_next)[..., None] * n
+            + jnp.einsum("bhl,bhld->bhd", w_c, kc)
+        )
+        return (C_next, n_next, m_next), jnp.swapaxes(h, 1, 2)  # (B,L,H,D)
+
+    xs = tuple(
+        t.reshape(B, N, L, *t.shape[2:]).swapaxes(0, 1)
+        for t in (q, k, v, log_i, log_f)
+    )
+    (C, n, m), hs = jax.lax.scan(per_chunk, (state["C"], state["n"], state["m"]), xs,
+                                 unroll=N if flags.unroll_scans() else 1)
+    h = hs.swapaxes(0, 1).reshape(B, S, H, D)[:, :S_orig]
+    return h, {"C": C, "n": n, "m": m}
+
+
+def apply_mlstm_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict]:
+    from repro.models import cache as cache_lib
+
+    B, S, d = x.shape
+    W = int(d * cfg.mlstm_proj_factor)
+    H = cfg.resolved_rec_heads
+    D = W // H
+    if state is None:
+        state = cache_lib.init_mlstm_state(B, H, D, D)
+        conv_hist = None
+    else:
+        conv_hist = state.get("conv")
+    u = jnp.einsum("bsd,dw->bsw", x, p["up_u"])
+    z = jnp.einsum("bsd,dw->bsw", x, p["up_z"])
+    u = shard(u, "batch", None, "act_ffn")
+    uc, new_hist = _causal_conv(u, p["conv_w"], conv_hist)
+    uc = act_fn("silu")(uc)
+    q = _block_diag_linear(uc, p["wq"]).reshape(B, S, H, D).astype(jnp.float32)
+    k = _block_diag_linear(uc, p["wk"]).reshape(B, S, H, D).astype(jnp.float32)
+    v = _block_diag_linear(u, p["wv"]).reshape(B, S, H, D).astype(jnp.float32)
+    log_i = (jnp.einsum("bsw,wh->bsh", uc, p["w_i"]) + p["b_i"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (jnp.einsum("bsw,wh->bsh", uc, p["w_f"]) + p["b_f"]).astype(jnp.float32)
+    )
+    cell_state = {"C": state["C"], "n": state["n"], "m": state["m"]}
+    h, new_cell = _mlstm_chunk_scan(q, k, v, log_i, log_f, cell_state, cfg.recurrent_chunk)
+    h = h.reshape(B, S, W).astype(x.dtype)
+    h = rms_norm(h, p["norm_scale"], 1e-6)
+    y = jnp.einsum("bsw,wd->bsd", h * act_fn("silu")(z), p["down"])
+    new_state = dict(new_cell)
+    new_state["conv"] = new_hist
+    return shard(y, "batch", None, "act_embed"), new_state
+
+
+def apply_mlstm_step(p, x, cfg: ModelConfig, state) -> Tuple[jax.Array, Dict]:
+    """Single-token decode: O(1) state update (B,1,d)."""
+    B, _, d = x.shape
+    W = int(d * cfg.mlstm_proj_factor)
+    H = cfg.resolved_rec_heads
+    D = W // H
+    u = jnp.einsum("bsd,dw->bsw", x, p["up_u"])
+    z = jnp.einsum("bsd,dw->bsw", x, p["up_z"])
+    uc, new_hist = _causal_conv(u, p["conv_w"], state["conv"])
+    uc = act_fn("silu")(uc)
+    q = _block_diag_linear(uc, p["wq"]).reshape(B, H, D).astype(jnp.float32)
+    k = _block_diag_linear(uc, p["wk"]).reshape(B, H, D).astype(jnp.float32)
+    v = _block_diag_linear(u, p["wv"]).reshape(B, H, D).astype(jnp.float32)
+    log_i = (jnp.einsum("bw,wh->bh", uc[:, 0], p["w_i"]) + p["b_i"]).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (jnp.einsum("bw,wh->bh", uc[:, 0], p["w_f"]) + p["b_f"]).astype(jnp.float32)
+    )
+    scale = 1.0 / math.sqrt(D)
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    w_old = jnp.exp(log_f + state["m"] - m_new)
+    w_in = jnp.exp(log_i - m_new)
+    C = w_old[..., None, None] * state["C"] + w_in[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = w_old[..., None] * state["n"] + w_in[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, C)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q * scale, n)), jnp.exp(-m_new)
+    )
+    h = (num / denom[..., None]).reshape(B, 1, W).astype(x.dtype)
+    h = rms_norm(h, p["norm_scale"], 1e-6)
+    y = jnp.einsum("bsw,wd->bsd", h * act_fn("silu")(z), p["down"])
+    return y, {"C": C, "n": n, "m": m_new, "conv": new_hist}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory cell, sequential scan)
+# ---------------------------------------------------------------------------
+
+def make_slstm_block(mk: Maker, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H = cfg.resolved_rec_heads
+    Dh = d // H
+    ff = int(d * cfg.slstm_proj_factor)
+    gates = {}
+    for name in ("z", "i", "f", "o"):
+        gates[f"w_{name}"] = mk.normal((d, d), ("embed", None))
+        gates[f"r_{name}"] = mk.normal((H, Dh, Dh), (None, None, None),
+                                       scale=1.0 / math.sqrt(Dh))
+        gates[f"b_{name}"] = (
+            mk.const(jnp.linspace(3.0, 6.0, d).reshape(H, Dh), (None, None))
+            if name == "f" else mk.zeros((H, Dh), (None, None))
+        )
+    return {
+        **gates,
+        "conv_w": mk.normal((cfg.rglru_conv_width, d), ("conv", "embed"), scale=0.1),
+        "norm_scale": mk.zeros((d,), ("embed",)),
+        "ff_up": mk.normal((d, ff), ("embed", "ffn")),
+        "ff_down": mk.normal((ff, d), ("ffn", "embed"), scale=1.0 / math.sqrt(ff)),
+    }
+
+
+def _slstm_cell(p, H, Dh, carry, xs):
+    c, n, m, h = carry                        # each (B, H, Dh) fp32
+    zx, ix, fx, ox = xs                       # pre-activations from x: (B, H, Dh)
+    rec = lambda name: jnp.einsum(
+        "bhd,hde->bhe", h.astype(zx.dtype), p[f"r_{name}"]
+    ).astype(jnp.float32)
+    z = jnp.tanh(zx.astype(jnp.float32) + rec("z"))
+    log_i = ix.astype(jnp.float32) + rec("i")
+    log_f = jax.nn.log_sigmoid(fx.astype(jnp.float32) + rec("f"))
+    o = jax.nn.sigmoid(ox.astype(jnp.float32) + rec("o"))
+    m_new = jnp.maximum(log_f + m, log_i)
+    c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(log_i - m_new) * z
+    n_new = jnp.maximum(jnp.exp(log_f + m - m_new) * n + jnp.exp(log_i - m_new), 1e-6)
+    h_new = o * (c_new / n_new)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def apply_slstm_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict]:
+    from repro.models import cache as cache_lib
+
+    B, S, d = x.shape
+    H = cfg.resolved_rec_heads
+    Dh = d // H
+    if state is None:
+        state = cache_lib.init_slstm_state(B, H, Dh, cfg.rglru_conv_width, x.dtype)
+    xc, new_hist = _causal_conv(x, p["conv_w"], state["conv"])
+    xc = act_fn("silu")(xc)
+    pre = {}
+    for name, src in (("z", x), ("i", xc), ("f", xc), ("o", x)):
+        pre[name] = (
+            jnp.einsum("bsd,de->bse", src, p[f"w_{name}"]).reshape(B, S, H, Dh)
+            + p[f"b_{name}"]
+        )
+    xs = tuple(jnp.swapaxes(pre[name], 0, 1) for name in ("z", "i", "f", "o"))
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    (c, n, m, h_fin), hs = jax.lax.scan(
+        lambda carry, xs_t: _slstm_cell(p, H, Dh, carry, xs_t), carry, xs
+    )
+    h = jnp.swapaxes(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = rms_norm(h, p["norm_scale"], 1e-6)
+    y = jnp.einsum("bsf,fd->bsd", act_fn("gelu")(
+        jnp.einsum("bsd,df->bsf", h, p["ff_up"])), p["ff_down"])
+    new_state = {"c": c, "n": n, "m": m, "h": h_fin, "conv": new_hist}
+    return shard(y, "batch", None, "act_embed"), new_state
+
+
+def apply_slstm_step(p, x, cfg: ModelConfig, state) -> Tuple[jax.Array, Dict]:
+    y, new_state = apply_slstm_seq(p, x, cfg, state)
+    return y, new_state

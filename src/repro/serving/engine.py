@@ -1,0 +1,215 @@
+"""Batched serving engine: request queue, slot-based continuous batching,
+prefill + decode loops, per-request latency accounting (TTFT/TPOT/TTLT).
+
+Design (vLLM-lite, static-shape TPU-friendly):
+  * fixed ``max_batch`` decode slots; the decode executable is compiled once
+    for (max_batch, max_len) and replayed every step (the paper's
+    CUDA-graph-cached generation, in jit form);
+  * waiting requests are admitted whenever a slot frees, their prompt is
+    prefilled into the slot's cache region at a bucketed prompt length;
+  * per-slot position counters + an active mask keep finished slots inert
+    (they decode garbage into their own slot only) until replaced.
+
+Because each slot's KV lives in the same cache pytree, admission writes the
+newly prefilled slot into the batched cache via ``dynamic_update_slice``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.serving.sampling import SamplingParams, sample
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    params: SamplingParams = SamplingParams()
+    # filled by the engine:
+    submit_time: float = 0.0
+    first_token_time: float = 0.0
+    finish_time: float = 0.0
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_time - self.submit_time
+
+    @property
+    def ttlt_s(self) -> float:
+        return self.finish_time - self.submit_time
+
+    @property
+    def tpot_s(self) -> float:
+        n = max(len(self.output_tokens) - 1, 1)
+        return (self.finish_time - self.first_token_time) / n
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        max_batch: int = 4,
+        max_len: int = 512,
+        prompt_bucket: int = 32,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.prompt_bucket = prompt_bucket
+        self.key = jax.random.PRNGKey(seed)
+        dtype = jnp.dtype(cfg.dtype)
+        self.cache = model_lib.init_cache(cfg, max_batch, max_len, dtype)
+        # one-slot prefill cache template (prefill runs at batch=1 per admit)
+        self._slot_cache_tmpl = model_lib.init_cache(cfg, 1, max_len, dtype)
+        self.positions = np.zeros(max_batch, np.int64)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: deque = deque()
+        self.finished: List[Request] = []
+        self._next_tokens = np.zeros((max_batch, 1), np.int32)
+        self._uid = 0
+
+        self._prefill = jax.jit(
+            lambda p, batch, cache: model_lib.prefill(cfg, p, batch, cache))
+        self._decode = jax.jit(
+            lambda p, tok, pos, cache: model_lib.decode_step(cfg, p, tok, pos, cache))
+
+    # -- public API -----------------------------------------------------------
+    def submit(self, prompt: np.ndarray,
+               params: Optional[SamplingParams] = None) -> int:
+        req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
+                      params=params or SamplingParams())
+        req.submit_time = time.perf_counter()
+        self._uid += 1
+        self.queue.append(req)
+        return req.uid
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive until queue + slots drain (or step budget); returns finished."""
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self._admit()
+            self._decode_once()
+            steps += 1
+        return self.finished
+
+    # -- internals --------------------------------------------------------------
+    def _bucketed(self, n: int) -> int:
+        b = self.prompt_bucket
+        return min(self.max_len - 1, ((n + b - 1) // b) * b)
+
+    def _admit(self) -> None:
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            plen = self._bucketed(len(req.prompt))
+            toks = np.zeros((1, plen), np.int32)
+            toks[0, -len(req.prompt):] = req.prompt[: plen]
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.is_encdec:
+                batch["enc_embeds"] = jnp.zeros(
+                    (1, max(plen // 2, 1), self.cfg.d_model), jnp.dtype(self.cfg.dtype))
+            if self.cfg.num_vision_tokens:
+                batch["vision_embeds"] = jnp.zeros(
+                    (1, self.cfg.num_vision_tokens, self.cfg.d_model),
+                    jnp.dtype(self.cfg.dtype))
+            logits, slot_cache = self._prefill(
+                self.params, batch, self._slot_cache_tmpl)
+            self.cache = self._merge_slot_cache(self.cache, slot_cache, slot)
+            self.key, k = jax.random.split(self.key)
+            tok = sample(logits, req.params, k)
+            req.first_token_time = time.perf_counter()
+            req.output_tokens.append(int(tok[0]))
+            self._next_tokens[slot, 0] = int(tok[0])
+            self.positions[slot] = plen
+            self.slots[slot] = req
+            self._maybe_finish(slot)
+
+    @staticmethod
+    def _merge_slot_cache(full_cache, slot_cache, slot: int):
+        """Write a freshly prefilled single-slot cache into decode slot ``slot``.
+
+        Cache leaves under ``groups`` carry a leading scan-group axis, so the
+        batch dim is axis 1 there and axis 0 under ``rest``.
+        """
+
+        def upd(axis):
+            def fn(full, one):
+                if full.ndim <= axis:
+                    return full  # scalars / shared bookkeeping (e.g. `ring`)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), slot, axis=axis)
+
+            return fn
+
+        merged = {}
+        if "groups" in full_cache:
+            merged["groups"] = jax.tree.map(
+                upd(1), full_cache["groups"], slot_cache["groups"])
+        if "rest" in full_cache:
+            merged["rest"] = jax.tree.map(
+                upd(0), full_cache["rest"], slot_cache["rest"])
+        return merged
+
+    def _decode_once(self) -> None:
+        if not any(s is not None for s in self.slots):
+            return
+        tok = jnp.asarray(self._next_tokens)
+        pos_vec = jnp.asarray(self.positions, jnp.int32)  # per-slot positions
+        logits, self.cache = self._decode(self.params, tok, pos_vec, self.cache)
+        self.key, k = jax.random.split(self.key)
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = sample(logits[slot:slot + 1], req.params,
+                       jax.random.fold_in(k, slot))
+            req.output_tokens.append(int(t[0]))
+            self._next_tokens[slot, 0] = int(t[0])
+            self.positions[slot] += 1
+            self._maybe_finish(slot)
+
+    def _maybe_finish(self, slot: int) -> None:
+        req = self.slots[slot]
+        if req is None:
+            return
+        done = len(req.output_tokens) >= req.params.max_new_tokens
+        if req.params.eos_token >= 0 and req.output_tokens and \
+                req.output_tokens[-1] == req.params.eos_token:
+            done = True
+        if self.positions[slot] >= self.max_len - 1:
+            done = True
+        if done:
+            req.finish_time = time.perf_counter()
+            self.finished.append(req)
+            self.slots[slot] = None
+
+    # -- metrics -----------------------------------------------------------------
+    def latency_summary(self) -> Dict[str, float]:
+        if not self.finished:
+            return {}
+        ttfts = [r.ttft_s for r in self.finished]
+        tpots = [r.tpot_s for r in self.finished]
+        ttlts = [r.ttlt_s for r in self.finished]
+        mean = lambda xs: sum(xs) / len(xs)
+        return {
+            "requests": len(self.finished),
+            "ttft_ms": mean(ttfts) * 1e3,
+            "tpot_ms": mean(tpots) * 1e3,
+            "ttlt_ms": mean(ttlts) * 1e3,
+        }

@@ -1,0 +1,29 @@
+"""Token sampling strategies for the serving engine."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0     # 0 -> greedy
+    top_k: int = 0               # 0 -> no top-k filter
+    eos_token: int = -1          # -1 -> never stops early
+    max_new_tokens: int = 64
+
+
+def sample(logits: jax.Array, params: SamplingParams, key: jax.Array) -> jax.Array:
+    """logits (B, V) -> tokens (B,) int32."""
+    if params.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / params.temperature
+    if params.top_k > 0:
+        vals, _ = jax.lax.top_k(logits, params.top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

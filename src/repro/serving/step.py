@@ -1,0 +1,35 @@
+"""Jitted serving-step builders (shared by the engine and the dry-run).
+
+``make_prefill_step`` / ``make_decode_step`` return pure functions with the
+exact signatures the multi-pod dry-run lowers; shardings are attached by the
+caller (``launch.dryrun`` / ``serving.engine``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch, cache):
+        return model_lib.prefill(cfg, params, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, token, position, cache):
+        return model_lib.decode_step(cfg, params, token, position, cache)
+
+    return decode_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """The dry-run `serve_step`: one new token against a seq_len KV cache."""
+    return make_decode_step(cfg)

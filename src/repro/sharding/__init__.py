@@ -1,0 +1,1 @@
+from repro.sharding.rules import shard, use_mesh, logical_to_pspec  # noqa: F401

@@ -1,0 +1,188 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Every parameter and activation in the model code is annotated with *logical*
+axis names ("embed", "heads", "ffn", ...).  A ``Rules`` object maps those to
+physical mesh axes; ``logical_to_pspec`` turns an axis tuple into a
+``PartitionSpec``.  The model code itself never mentions physical axes, so
+the same code lowers on a 1-device CPU, a 16x16 pod, or a 2x16x16 multi-pod
+mesh.
+
+Rules are *mesh-aware*: a logical axis is only mapped onto a physical axis if
+the corresponding dimension is divisible by that axis size (XLA tolerates
+uneven sharding via padding, but for small dims like kv_heads=1 the padding
+waste is worse than replication, so we drop the mapping instead).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Default logical->physical mapping.  "data_axes" is (pod, data) when the pod
+# axis exists so that FSDP and the batch dim span pods.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,             # sequence kept whole by default (see "seq_sp")
+    "seq_sp": "model",       # sequence-parallel alternative for long prefill
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv": None,
+    "act_ffn": "model",
+    "vocab_out": "model",
+    # params
+    "embed": ("pod", "data"),   # FSDP axis
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qkv": "model",          # fused per-head projections
+    "ffn": "model",
+    "experts": "model",      # expert parallelism
+    "expert_ffn": None,
+    "lru": "model",
+    "conv": None,
+    "layers": None,          # stacked-scan leading axis, never sharded
+}
+
+
+# Weight-stationary serving rules: decode-step activations are tiny (one
+# token per sequence), so replicating them across the data axis turns the
+# per-layer FSDP weight all-gathers into small activation all-reduces
+# (EXPERIMENTS §Perf iteration: command-r decode).  Params/caches keep their
+# 2D sharding.
+SERVE_RULES: Dict[str, MeshAxes] = {
+    **DEFAULT_RULES,
+    "batch": None,
+    "act_embed": "data",     # residual stream d-sharded over data: every
+    "act_heads": "model",    # matmul contracts a local dim on both mesh axes
+    "act_ffn": "model",
+    "vocab_out": "model",
+}
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, MeshAxes] = dict(DEFAULT_RULES)
+
+
+_STATE = _State()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None):
+    """Activate a mesh + rule set for model tracing/lowering."""
+    prev = (_STATE.mesh, _STATE.rules)
+    _STATE.mesh = mesh
+    _STATE.rules = dict(DEFAULT_RULES if rules is None else rules)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _STATE.mesh, _STATE.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _STATE.mesh
+
+
+def _physical_axes(mesh: Mesh, spec: MeshAxes) -> Optional[Tuple[str, ...]]:
+    """Keep only axes present in the mesh; None if nothing survives."""
+    if spec is None:
+        return None
+    axes = (spec,) if isinstance(spec, str) else tuple(spec)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    return axes or None
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def logical_to_pspec(
+    logical: Sequence[Optional[str]],
+    dims: Optional[Sequence[int]] = None,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Dict[str, MeshAxes]] = None,
+) -> PartitionSpec:
+    """Map logical axis names to a PartitionSpec for the active mesh.
+
+    ``dims`` (matching shape) enables the divisibility check; without it the
+    mapping is taken as-is.  Each physical axis may be used at most once in a
+    spec (PartitionSpec requirement) — first logical axis wins.
+    """
+    mesh = mesh or _STATE.mesh
+    rules = rules if rules is not None else _STATE.rules
+    if mesh is None:
+        return PartitionSpec()
+    used = set()
+    out = []
+    for i, name in enumerate(logical):
+        spec = rules.get(name) if name else None
+        axes = _physical_axes(mesh, spec) if spec else None
+        if axes:
+            axes = tuple(a for a in axes if a not in used)
+        if axes and dims is not None:
+            if dims[i] % _axis_size(mesh, axes) != 0:
+                # try a shrinking suffix/prefix before giving up
+                axes = tuple(
+                    a for a in axes if dims[i] % mesh.shape[a] == 0
+                )[:1] or None
+        if axes:
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        else:
+            out.append(None)
+    return PartitionSpec(*out)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Activation sharding constraint by logical axis names (no-op w/o mesh)."""
+    mesh = _STATE.mesh
+    if mesh is None:
+        return x
+    pspec = logical_to_pspec(logical, dims=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, pspec))
+
+
+def named_sharding(logical: Sequence[Optional[str]], dims=None) -> Optional[NamedSharding]:
+    mesh = _STATE.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_pspec(logical, dims=dims, mesh=mesh))
+
+
+def tree_pspecs(axes_tree, shapes_tree=None, mesh=None, rules=None):
+    """Map a pytree of logical-axis tuples to PartitionSpecs.
+
+    ``axes_tree`` leaves are tuples of logical names; ``shapes_tree`` (same
+    structure, leaves = shape tuples) enables divisibility checks.
+    """
+    mesh = mesh or _STATE.mesh
+    if shapes_tree is None:
+        return jax.tree.map(
+            lambda ax: logical_to_pspec(ax, mesh=mesh, rules=rules),
+            axes_tree,
+            is_leaf=lambda l: isinstance(l, tuple) and all(
+                isinstance(a, (str, type(None))) for a in l),
+        )
+    return jax.tree.map(
+        lambda ax, shp: logical_to_pspec(ax, dims=shp, mesh=mesh, rules=rules),
+        axes_tree,
+        shapes_tree,
+        is_leaf=lambda l: isinstance(l, tuple) and all(
+            isinstance(a, (str, type(None))) for a in l),
+    )

@@ -1,0 +1,95 @@
+"""AdamW + schedules, pure JAX (no optax dependency).
+
+Optimizer state mirrors the parameter pytree (same logical sharding axes →
+ZeRO-style sharding for free: whatever FSDP axes the params use, the moments
+use too).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    mu: Dict
+    nu: Dict
+    count: jax.Array
+
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_schedule(
+    peak_lr: float, warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(1.0, step / max(warmup_steps, 1))
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # decay only matrices (embeddings/projections), not norms/biases
+    decay_min_ndim: int = 2
+
+    def init(self, params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(self, grads, state: OptState, params) -> Tuple[Dict, OptState]:
+        count = state.count + 1
+        lr = self.schedule(count)
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = self.b1 * mu + (1 - self.b1) * g
+            nu = self.b2 * nu + (1 - self.b2) * jnp.square(g)
+            step = (mu / b1c) / (jnp.sqrt(nu / b2c) + self.eps)
+            if p.ndim >= self.decay_min_ndim:
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return new_p, mu, nu
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, OptState(mu=new_mu, nu=new_nu, count=count)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)
+    ))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm

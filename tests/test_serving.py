@@ -1,0 +1,85 @@
+"""Serving engine: slot-based continuous batching, latency accounting,
+decode correctness under mixed slot positions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_serves_all_requests(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64, prompt_bucket=8)
+    rng = np.random.default_rng(0)
+    uids = [eng.submit(rng.integers(0, cfg.vocab_size, 5 + 3 * i),
+                       SamplingParams(max_new_tokens=6)) for i in range(5)]
+    finished = eng.run()
+    assert sorted(r.uid for r in finished) == sorted(uids)
+    assert all(len(r.output_tokens) == 6 for r in finished)
+    s = eng.latency_summary()
+    assert s["requests"] == 5
+    assert s["ttlt_ms"] >= s["ttft_ms"] > 0
+
+
+def test_engine_greedy_matches_reference_decode(small_model):
+    """Tokens produced through the engine == tokens from a manual prefill +
+    greedy decode loop (per-slot positions are honest)."""
+    cfg, params = small_model
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    gen = 5
+
+    # reference: manual loop at batch=1
+    cache = model_lib.init_cache(cfg, 1, 64, jnp.dtype(cfg.dtype))
+    logits, cache = model_lib.prefill(
+        cfg, params, {"tokens": jnp.asarray(prompt)[None]}, cache)
+    ref_tokens = [int(jnp.argmax(logits, -1)[0])]
+    pos = len(prompt)
+    for _ in range(gen - 1):
+        tok = jnp.asarray([[ref_tokens[-1]]], jnp.int32)
+        logits, cache = model_lib.decode_step(
+            cfg, params, tok, jnp.asarray(pos, jnp.int32), cache)
+        ref_tokens.append(int(jnp.argmax(logits, -1)[0]))
+        pos += 1
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64, prompt_bucket=8)
+    eng.submit(prompt, SamplingParams(temperature=0.0, max_new_tokens=gen))
+    # a second, longer request sharing the batch must not corrupt slot 0
+    eng.submit(rng.integers(0, cfg.vocab_size, 13),
+               SamplingParams(temperature=0.0, max_new_tokens=gen))
+    finished = eng.run()
+    got = next(r for r in finished if r.uid == 0).output_tokens
+    assert got == ref_tokens
+
+
+def test_engine_eos_stops_early(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=64)
+    rng = np.random.default_rng(2)
+    # pick the model's own first greedy token as "eos" to force a 1-token gen
+    prompt = rng.integers(0, cfg.vocab_size, 6)
+    eng.submit(prompt, SamplingParams(max_new_tokens=8))
+    first = eng.run()[0].output_tokens[0]
+    eng2 = ServingEngine(cfg, params, max_batch=1, max_len=64)
+    eng2.submit(prompt, SamplingParams(max_new_tokens=8, eos_token=first))
+    r = eng2.run()[0]
+    assert len(r.output_tokens) == 1 and r.output_tokens[0] == first
+
+
+def test_serve_driver():
+    from repro.launch.serve import main
+
+    assert main(["--arch", "qwen1.5-0.5b", "--smoke", "--requests", "3",
+                 "--max-new", "4", "--max-batch", "2", "--max-len", "64"]) == 0

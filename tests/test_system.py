@@ -1,0 +1,92 @@
+"""End-to-end behaviour tests for the full system (paper workflow).
+
+The ELANA workflow: build any registered model behind the one-call API,
+profile size/cache analytically, measure latency+energy on the host
+device, estimate on target hardware, and export a kernel timeline —
+then train and serve the same model through the production drivers.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.profiler import Elana
+from repro.core import energy as energy_lib
+
+
+def test_elana_full_workflow_smoke(tmp_path):
+    """The complete paper §2 feature set against one small model."""
+    e = Elana("qwen1.5-0.5b", smoke=True)
+
+    # §2.2 sizes
+    size = e.size_report()
+    assert size.param_count > 0
+    cache = e.cache_report(batch=2, seq_len=64)
+    assert cache.kv_bytes > 0
+
+    # §2.3 measured latency (real wall-clock on CPU)
+    m = e.measure(batch=1, prompt_len=16, gen_len=4, iters=2)
+    assert m["ttft_ms"] > 0 and m["tpot_ms"] > 0
+    # TTLT decomposition: ttlt ≈ ttft + (gen-1) * tpot (loose: host jitter)
+    expected = m["ttft_ms"] + 3 * m["tpot_ms"]
+    assert m["ttlt_ms"] < expected * 5 + 50
+
+    # §2.4 energy via a synthetic 10 Hz sampler
+    m2 = e.measure(batch=1, prompt_len=16, gen_len=4, iters=2,
+                   power_reader=energy_lib.SyntheticReader(lambda t: 42.0))
+    assert m2["j_per_token"] > 0
+
+    # §2.3/2.4 estimator mode on every registered hardware target
+    for hw in ("a6000", "jetson-orin-nano", "jetson-agx-thor", "tpu-v5e"):
+        est = e.estimate(hardware=hw, batch=1, prompt_len=128, gen_len=128)
+        assert est.tpot.latency_s > 0 and est.ttlt.joules > 0
+
+    # §2.5 perfetto trace
+    path = str(tmp_path / "t.json")
+    summary = e.trace(path, phase="decode", seq_len=128)
+    assert os.path.exists(path) and summary["total_s"] > 0
+
+
+def test_elana_custom_builder_hook():
+    """The paper's `_build_model_and_tokenizer` extension point."""
+    from repro.configs import get_config
+    from repro.models import model as model_lib
+
+    def builder():
+        cfg = get_config("tinyllama-1.1b", smoke=True)
+        params, _ = model_lib.init(cfg, jax.random.PRNGKey(7))
+        return cfg, params
+
+    e = Elana(builder=builder)
+    assert e.size_report().param_count == sum(
+        p.size for p in jax.tree.leaves(e.params))
+    m = e.measure(batch=1, prompt_len=8, gen_len=2, iters=1)
+    assert m["ttft_ms"] > 0
+
+
+def test_cli_end_to_end(capsys):
+    from repro.cli import main
+
+    assert main(["archs"]) == 0
+    assert main(["size", "--arch", "llama3.1-8b"]) == 0
+    out = capsys.readouterr().out
+    assert "16.06 GB" in out
+    assert main(["cache", "--arch", "nemotron-h-8b", "--batch", "128",
+                 "--seq-len", "2048"]) == 0
+    assert main(["estimate", "--arch", "qwen2.5-7b", "--hardware", "a6000",
+                 "--batch", "1", "--prompt", "512", "--gen", "512"]) == 0
+    out = capsys.readouterr().out
+    assert "TPOT" in out
+
+
+def test_measured_mode_scaling_sanity():
+    """More tokens must cost more wall-clock (measured mode is real)."""
+    e = Elana("qwen1.5-0.5b", smoke=True)
+    lp = e._latency_profiler()
+    t_short = lp.ttft(1, 8, iters=3).mean_s
+    t_long = lp.ttft(1, 64, iters=3).mean_s
+    assert t_long > t_short * 1.2
