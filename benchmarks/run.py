@@ -13,8 +13,9 @@ import sys
 import time
 from typing import List
 
-from benchmarks import (kernel_bench, measured_cpu, roofline, table2_size,
-                        table3_latency_energy, table4_jetson, trace_demo)
+from benchmarks import (kernel_bench, measured_cpu, roofline, serving_bench,
+                        table2_size, table3_latency_energy, table4_jetson,
+                        trace_demo)
 
 MODULES = {
     "table2": table2_size,            # paper Table 2
@@ -23,6 +24,7 @@ MODULES = {
     "trace": trace_demo,              # paper Figure 1
     "measured": measured_cpu,         # §2.3/2.4 measured mode
     "kernels": kernel_bench,          # Pallas kernel reference timings
+    "serving": serving_bench,         # fused vs per-slot decode loop
     "roofline": roofline,             # assignment §Roofline (from dry-run JSONs)
 }
 
@@ -31,7 +33,12 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated module keys")
     args = ap.parse_args(argv)
-    keys = args.only.split(",") if args.only else list(MODULES)
+    keys = ([k.strip() for k in args.only.split(",") if k.strip()]
+            if args.only else list(MODULES))
+    unknown = sorted(set(keys) - set(MODULES))
+    if unknown:
+        ap.error(f"unknown module key(s): {', '.join(unknown)} "
+                 f"(available: {', '.join(MODULES)})")
 
     csv_rows: List[str] = []
     sections: List[str] = []

@@ -19,6 +19,7 @@ a thread gives the same 10 Hz cadence without pickling device handles).
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import threading
 import time
@@ -134,6 +135,35 @@ class EnergyResult:
         return self.joules / max(count, 1)
 
 
+def integrate_joules(
+    samples: Sequence[Tuple[float, Sequence[float]]], t0: float, t1: float
+) -> float:
+    """Energy over [t0, t1] treating the samples as a step function.
+
+    Power at time t is the (device-summed) watts of the latest sample at or
+    before t (the first sample extends backwards).  Because the step
+    function is fixed, the integral is *additive* over adjacent windows:
+    tiling [t0, t1] with sub-windows and summing reproduces the total
+    exactly — the property per-request energy attribution relies on.
+    """
+    if t1 <= t0 or not samples:
+        return 0.0
+    ts = [t for t, _ in samples]
+    ws = [sum(w) for _, w in samples]
+    total = 0.0
+    cur = t0
+    # index of the sample governing time `cur`
+    i = max(bisect.bisect_right(ts, cur) - 1, 0)
+    while cur < t1:
+        nxt = ts[i + 1] if i + 1 < len(ts) else t1
+        seg_end = min(max(nxt, cur), t1)
+        total += ws[i] * (seg_end - cur)
+        cur = seg_end
+        if i + 1 < len(ts) and ts[i + 1] <= cur:
+            i += 1
+    return total
+
+
 class PowerMonitor:
     """10 Hz sampler thread; use as a context manager around a workload."""
 
@@ -175,6 +205,16 @@ class PowerMonitor:
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=2.0)
+
+    @property
+    def window(self) -> Tuple[float, float]:
+        """(enter, exit) perf_counter stamps (exit == now while running)."""
+        t1 = self._t1 if self._t1 > self._t0 else time.perf_counter()
+        return self._t0, t1
+
+    def joules_between(self, t0: float, t1: float) -> float:
+        """Step-function energy over [t0, t1] (additive across windows)."""
+        return integrate_joules(self._samples, t0, t1)
 
     def result(self) -> EnergyResult:
         duration = max(self._t1 - self._t0, 1e-9)

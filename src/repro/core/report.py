@@ -47,6 +47,38 @@ def table2_rows(size_reports, cache_reports_by_workload) -> List[Dict]:
     return rows
 
 
+def serving_summary_rows(summary: Dict) -> List[Dict]:
+    """ELANA serving metrics: mean + p50/p95/p99 per latency family."""
+    rows = []
+    for name, label in (("ttft", "TTFT"), ("tpot", "TPOT"), ("ttlt", "TTLT")):
+        if f"{name}_ms" not in summary:
+            continue
+        rows.append({
+            "Metric": label,
+            "mean(ms)": round(summary[f"{name}_ms"], 2),
+            "p50(ms)": round(summary.get(f"{name}_p50_ms", 0.0), 2),
+            "p95(ms)": round(summary.get(f"{name}_p95_ms", 0.0), 2),
+            "p99(ms)": round(summary.get(f"{name}_p99_ms", 0.0), 2),
+        })
+    return rows
+
+
+def serving_request_rows(requests) -> List[Dict]:
+    """Per-request table: latency + attributed energy (paper §2.4)."""
+    rows = []
+    for r in requests:
+        rows.append({
+            "Req": r.uid,
+            "Prompt": len(r.prompt),
+            "Out": len(r.output_tokens),
+            "TTFT(ms)": round(r.ttft_s * 1e3, 1),
+            "TTLT(ms)": round(r.ttlt_s * 1e3, 1),
+            "J/Req": round(r.joules, 3),
+            "Trunc": "y" if r.truncated else "",
+        })
+    return rows
+
+
 def table3_rows(estimates) -> List[Dict]:
     """Paper Table 3/4: TTFT / J/Prom / TPOT / J/Tok / TTLT / J/Req."""
     rows = []

@@ -1,7 +1,15 @@
-"""Production serving driver: batched engine + ELANA request metrics.
+"""Production serving driver: open-loop traffic against the device-resident
+continuous-batching engine, with per-request energy attribution.
 
     python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
-        --requests 8 --max-new 16 --max-batch 4
+        --arrival-rate 4 --requests 8 --max-new 16 --max-batch 4
+
+``--arrival-rate 0`` submits every request up front (the legacy closed-loop
+mode); otherwise arrivals follow a Poisson process at the given rate.
+``--replay t:plen:max_new,t:plen:max_new,...`` replays a deterministic
+schedule instead.  Energy is sampled by a ``core.energy`` power reader
+(``--power-reader proc|model|synthetic|none``) and attributed to requests
+proportionally to the tokens each emitted within every measured window.
 """
 
 from __future__ import annotations
@@ -13,11 +21,37 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import report
+from repro.core.energy import (ModelReader, PowerMonitor, ProcStatReader,
+                               SyntheticReader)
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as model_lib
 from repro.serving.engine import ServingEngine
-from repro.serving.sampling import SamplingParams
+from repro.serving.workload import (LengthDist, OpenLoopDriver, WorkloadSpec,
+                                    poisson_trace, replay_trace)
 from repro.sharding import rules
+
+
+def _make_reader(kind: str):
+    if kind == "proc":
+        return ProcStatReader()
+    if kind == "model":
+        return ModelReader(idle_watts=10.0, tdp_watts=65.0)
+    if kind == "synthetic":
+        return SyntheticReader(lambda t: 42.0)
+    return None
+
+
+def _parse_replay(text: str):
+    rows = []
+    for item in text.split(","):
+        try:
+            t, plen, max_new = item.split(":")
+            rows.append((float(t), int(plen), int(max_new)))
+        except ValueError:
+            raise ValueError(
+                f"bad --replay item {item!r}: expected t:plen:max_new")
+    return rows
 
 
 def main(argv=None) -> int:
@@ -30,24 +64,63 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals/sec; 0 = submit all up front")
+    ap.add_argument("--prompt-len-dist", default="uniform",
+                    choices=["fixed", "uniform", "lognormal"])
+    ap.add_argument("--prompt-len-mean", type=float, default=24.0)
+    ap.add_argument("--replay", default="",
+                    help="deterministic schedule t:plen:max_new,... "
+                         "(overrides --arrival-rate)")
+    ap.add_argument("--power-reader", default="proc",
+                    choices=["proc", "model", "synthetic", "none"])
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    plo = max(int(args.prompt_len_mean // 4), 1)
+    phi = max(int(args.prompt_len_mean * 2), plo + 1)
+    spec = WorkloadSpec(
+        arrival_rate=args.arrival_rate,
+        num_requests=args.requests,
+        prompt_len=LengthDist(kind=args.prompt_len_dist,
+                              mean=args.prompt_len_mean, low=plo, high=phi),
+        output_len=LengthDist(kind="fixed", mean=args.max_new,
+                              low=1, high=max(args.max_new, 1)),
+        temperature=args.temperature,
+        seed=args.seed,
+    )
+    if args.replay:
+        try:
+            schedule = _parse_replay(args.replay)
+        except ValueError as e:
+            ap.error(str(e))
+        arrivals = replay_trace(schedule, cfg.vocab_size,
+                                seed=args.seed,
+                                temperature=args.temperature, top_k=20)
+    else:
+        arrivals = poisson_trace(spec, cfg.vocab_size)
+
+    reader = _make_reader(args.power_reader)
     with rules.use_mesh(make_host_mesh()):
         params, _ = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
         engine = ServingEngine(cfg, params, max_batch=args.max_batch,
-                               max_len=args.max_len)
-        rng = np.random.default_rng(args.seed)
-        for i in range(args.requests):
-            plen = int(rng.integers(4, args.max_len // 4))
-            prompt = rng.integers(0, cfg.vocab_size, plen)
-            engine.submit(prompt, SamplingParams(
-                temperature=args.temperature, top_k=20,
-                max_new_tokens=args.max_new))
-        finished = engine.run()
+                               max_len=args.max_len, seed=args.seed)
+        driver = OpenLoopDriver(engine, arrivals)
+        if reader is not None:
+            monitor = PowerMonitor(reader)
+            engine.attach_monitor(monitor)
+            with monitor:
+                finished = driver.run()
+        else:
+            finished = driver.run()
+
         summary = engine.latency_summary()
-        summary["tokens_generated"] = sum(len(r.output_tokens) for r in finished)
         print(json.dumps(summary, indent=2))
+        print("\n## Latency percentiles\n")
+        print(report.to_markdown(report.serving_summary_rows(summary)))
+        print("\n## Per-request (energy attributed per token window)\n")
+        print(report.to_markdown(report.serving_request_rows(
+            sorted(finished, key=lambda r: r.uid))))
     return 0
 
 

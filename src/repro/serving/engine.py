@@ -1,17 +1,37 @@
-"""Batched serving engine: request queue, slot-based continuous batching,
-prefill + decode loops, per-request latency accounting (TTFT/TPOT/TTLT).
+"""Device-resident continuous-batching serving engine.
 
 Design (vLLM-lite, static-shape TPU-friendly):
-  * fixed ``max_batch`` decode slots; the decode executable is compiled once
-    for (max_batch, max_len) and replayed every step (the paper's
-    CUDA-graph-cached generation, in jit form);
-  * waiting requests are admitted whenever a slot frees, their prompt is
-    prefilled into the slot's cache region at a bucketed prompt length;
-  * per-slot position counters + an active mask keep finished slots inert
-    (they decode garbage into their own slot only) until replaced.
 
-Because each slot's KV lives in the same cache pytree, admission writes the
-newly prefilled slot into the batched cache via ``dynamic_update_slice``.
+* **One fused jitted step** (``serving.step.make_decode_sample_step``)
+  performs decode forward + per-slot sampling + finish detection.  All
+  per-slot scheduler state — next tokens, positions, active mask, sampling
+  params (temperature / top-k / EOS), remaining-token budgets, and the PRNG
+  key — lives on device and threads through the step without touching the
+  host.  The executable is compiled once for (max_batch, max_len) and
+  replayed every step (the paper's CUDA-graph-cached generation, in jit
+  form).
+* **One host sync per step.**  The step returns a packed (3, B) int32 array
+  (token, done-flag, emitted-flag per slot); the host fetches it with a
+  single transfer and appends the token vector to a numpy ring buffer.  No
+  ``int(t[0])`` per slot, no per-slot sampling dispatches.
+* **Continuous batching.**  Waiting requests are admitted whenever a slot
+  frees; their prompt is prefilled at a bucketed length (batch=1) and the
+  resulting KV written into the batched cache via ``dynamic_update_slice``.
+  Admission updates the device state with O(1)-sized ``.at[slot].set``
+  writes — lazy device ops, not syncs.  Prompts longer than ``max_len - 1``
+  keep their *last* ``plen`` tokens and are flagged ``truncated``.
+* **Open-loop friendly.**  ``step()`` performs one admit+decode round so a
+  traffic driver (``serving.workload``) can interleave Poisson arrivals
+  with engine work; ``run()`` is the closed-loop drain used by tests.
+* **Per-request energy attribution.**  With a ``core.energy.PowerMonitor``
+  attached, the engine tiles wall-clock into windows (closed whenever a
+  request finishes and at drain); each window's joules — step-function
+  integral over the monitor's samples, exactly additive across windows —
+  are split over the requests proportionally to the tokens they emitted in
+  that window and accumulated on ``Request.joules``.
+
+Follow-on work (paged KV, chunked prefill) is tracked in ROADMAP.md
+§Serving.
 """
 
 from __future__ import annotations
@@ -19,15 +39,19 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.energy import PowerMonitor
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
 from repro.serving.sampling import SamplingParams, sample
+from repro.serving.step import init_slot_state, make_decode_sample_step
+
+_RING = 64  # host-side token ring buffer depth (tokens per slot per flush)
 
 
 @dataclasses.dataclass
@@ -40,6 +64,8 @@ class Request:
     first_token_time: float = 0.0
     finish_time: float = 0.0
     output_tokens: List[int] = dataclasses.field(default_factory=list)
+    truncated: bool = False
+    joules: float = 0.0
 
     @property
     def ttft_s(self) -> float:
@@ -55,6 +81,13 @@ class Request:
         return (self.finish_time - self.first_token_time) / n
 
 
+def _percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]) of a non-empty list."""
+    ys = sorted(xs)
+    k = max(int(np.ceil(len(ys) * q / 100.0)), 1) - 1
+    return ys[min(k, len(ys) - 1)]
+
+
 class ServingEngine:
     def __init__(
         self,
@@ -65,48 +98,93 @@ class ServingEngine:
         max_len: int = 512,
         prompt_bucket: int = 32,
         seed: int = 0,
+        monitor: Optional[PowerMonitor] = None,
+        top_k_max: int = 64,
     ):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.prompt_bucket = prompt_bucket
-        self.key = jax.random.PRNGKey(seed)
+        # static bound on per-request top-k inside the fused step (a full
+        # per-slot vocab sort would dominate it); requests asking for more
+        # are clamped — consistently, first token included
+        self.top_k_max = min(top_k_max, cfg.vocab_size)
+        self.key = jax.random.PRNGKey(seed)  # host-side key for prefill sampling
         dtype = jnp.dtype(cfg.dtype)
         self.cache = model_lib.init_cache(cfg, max_batch, max_len, dtype)
         # one-slot prefill cache template (prefill runs at batch=1 per admit)
         self._slot_cache_tmpl = model_lib.init_cache(cfg, 1, max_len, dtype)
-        self.positions = np.zeros(max_batch, np.int64)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: deque = deque()
         self.finished: List[Request] = []
-        self._next_tokens = np.zeros((max_batch, 1), np.int32)
         self._uid = 0
 
+        # device-resident scheduler state + fused step
+        self._state = init_slot_state(max_batch, seed=seed + 1)
+        self._step = jax.jit(
+            make_decode_sample_step(cfg, max_len, k_max=self.top_k_max))
         self._prefill = jax.jit(
             lambda p, batch, cache: model_lib.prefill(cfg, p, batch, cache))
-        self._decode = jax.jit(
-            lambda p, tok, pos, cache: model_lib.decode_step(cfg, p, tok, pos, cache))
+
+        # host-side token ring buffer: (max_batch, _RING) plus fill counts
+        self._ring = np.zeros((max_batch, _RING), np.int32)
+        self._ring_n = np.zeros(max_batch, np.int64)
+
+        # energy attribution
+        self.monitor = monitor
+        self._win_t0: Optional[float] = None
+        self._win_tokens: Dict[int, int] = {}
+        self.attributed_joules = 0.0
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: np.ndarray,
                params: Optional[SamplingParams] = None) -> int:
+        params = params or SamplingParams()
+        if params.top_k > self.top_k_max:
+            params = dataclasses.replace(params, top_k=self.top_k_max)
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
-                      params=params or SamplingParams())
+                      params=params)
         req.submit_time = time.perf_counter()
         self._uid += 1
         self.queue.append(req)
         return req.uid
 
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def step(self) -> bool:
+        """One admit + decode round; returns True if any work was done."""
+        if not self.busy:
+            return False
+        self._admit()
+        self._decode_once()
+        return True
+
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Drive until queue + slots drain (or step budget); returns finished."""
         steps = 0
-        while (self.queue or any(s is not None for s in self.slots)) \
-                and steps < max_steps:
-            self._admit()
-            self._decode_once()
+        while self.busy and steps < max_steps:
+            self.step()
             steps += 1
+        self.flush()
         return self.finished
+
+    def flush(self) -> None:
+        """Drain host-side buffers: ring-buffered tokens of still-running
+        requests (so ``output_tokens`` is complete even on a step-budget
+        exit) and the open energy-attribution window."""
+        for slot in range(self.max_batch):
+            self._flush_ring(slot)
+        self._flush_energy()
+
+    def attach_monitor(self, monitor: PowerMonitor) -> None:
+        """Start attributing the monitor's energy to requests from now on."""
+        self.monitor = monitor
+        self._win_t0 = None
+        self._win_tokens = {}
+
 
     # -- internals --------------------------------------------------------------
     def _bucketed(self, n: int) -> int:
@@ -119,8 +197,12 @@ class ServingEngine:
                 continue
             req = self.queue.popleft()
             plen = self._bucketed(len(req.prompt))
+            use = req.prompt
+            if len(use) > plen:  # keep the newest context, flag the loss
+                use = use[-plen:]
+                req.truncated = True
             toks = np.zeros((1, plen), np.int32)
-            toks[0, -len(req.prompt):] = req.prompt[: plen]
+            toks[0, -len(use):] = use
             batch = {"tokens": jnp.asarray(toks)}
             if self.cfg.is_encdec:
                 batch["enc_embeds"] = jnp.zeros(
@@ -133,13 +215,35 @@ class ServingEngine:
                 self.params, batch, self._slot_cache_tmpl)
             self.cache = self._merge_slot_cache(self.cache, slot_cache, slot)
             self.key, k = jax.random.split(self.key)
-            tok = sample(logits, req.params, k)
+            first = int(sample(logits, req.params, k)[0])
             req.first_token_time = time.perf_counter()
-            req.output_tokens.append(int(tok[0]))
-            self._next_tokens[slot, 0] = int(tok[0])
-            self.positions[slot] = plen
+            req.output_tokens.append(first)
             self.slots[slot] = req
-            self._maybe_finish(slot)
+            self._count_token(req)
+
+            done = (req.params.max_new_tokens <= 1
+                    or (req.params.eos_token >= 0
+                        and first == req.params.eos_token)
+                    or plen >= self.max_len - 1)
+            self._write_slot_state(
+                slot, token=first, position=plen,
+                remaining=req.params.max_new_tokens - 1,
+                params=req.params, active=not done)
+            if done:
+                self._finish(slot)
+
+    def _write_slot_state(self, slot: int, *, token: int, position: int,
+                          remaining: int, params: SamplingParams,
+                          active: bool) -> None:
+        """Admission-time write of one slot's device state (lazy device ops)."""
+        s = self._state
+        s["tokens"] = s["tokens"].at[slot, 0].set(token)
+        s["positions"] = s["positions"].at[slot].set(position)
+        s["remaining"] = s["remaining"].at[slot].set(remaining)
+        s["temperature"] = s["temperature"].at[slot].set(params.temperature)
+        s["top_k"] = s["top_k"].at[slot].set(params.top_k)
+        s["eos"] = s["eos"].at[slot].set(params.eos_token)
+        s["active"] = s["active"].at[slot].set(active)
 
     @staticmethod
     def _merge_slot_cache(full_cache, slot_cache, slot: int):
@@ -170,34 +274,71 @@ class ServingEngine:
     def _decode_once(self) -> None:
         if not any(s is not None for s in self.slots):
             return
-        tok = jnp.asarray(self._next_tokens)
-        pos_vec = jnp.asarray(self.positions, jnp.int32)  # per-slot positions
-        logits, self.cache = self._decode(self.params, tok, pos_vec, self.cache)
-        self.key, k = jax.random.split(self.key)
-        for slot, req in enumerate(self.slots):
+        self._state, self.cache, out = self._step(
+            self.params, self._state, self.cache)
+        out_np = np.asarray(out)  # the single host<->device sync per step
+        tokens, done, emitted = out_np[0], out_np[1], out_np[2]
+        for slot in np.nonzero(emitted)[0]:
+            req = self.slots[slot]
             if req is None:
-                continue
-            t = sample(logits[slot:slot + 1], req.params,
-                       jax.random.fold_in(k, slot))
-            req.output_tokens.append(int(t[0]))
-            self._next_tokens[slot, 0] = int(t[0])
-            self.positions[slot] += 1
-            self._maybe_finish(slot)
+                continue  # stale flag for a slot freed on the host side
+            n = int(self._ring_n[slot])
+            self._ring[slot, n] = tokens[slot]
+            self._ring_n[slot] = n + 1
+            if n + 1 == _RING:
+                self._flush_ring(slot)
+            self._count_token(req)
+            if done[slot]:
+                self._finish(slot)
 
-    def _maybe_finish(self, slot: int) -> None:
+    def _flush_ring(self, slot: int) -> None:
+        n = int(self._ring_n[slot])
+        req = self.slots[slot]
+        if req is not None and n:
+            req.output_tokens.extend(int(t) for t in self._ring[slot, :n])
+        self._ring_n[slot] = 0
+
+    def _finish(self, slot: int) -> None:
         req = self.slots[slot]
         if req is None:
             return
-        done = len(req.output_tokens) >= req.params.max_new_tokens
-        if req.params.eos_token >= 0 and req.output_tokens and \
-                req.output_tokens[-1] == req.params.eos_token:
-            done = True
-        if self.positions[slot] >= self.max_len - 1:
-            done = True
-        if done:
-            req.finish_time = time.perf_counter()
-            self.finished.append(req)
-            self.slots[slot] = None
+        self._flush_ring(slot)
+        req.finish_time = time.perf_counter()
+        self.finished.append(req)
+        self.slots[slot] = None
+        # state["active"] already cleared on device by the fused step for
+        # decode finishes; clear explicitly for admission-time finishes
+        self._state["active"] = self._state["active"].at[slot].set(False)
+        self._flush_energy()
+
+    # -- energy attribution ------------------------------------------------------
+    def _count_token(self, req: Request) -> None:
+        if self.monitor is None:
+            return
+        if self._win_t0 is None:
+            t0 = self.monitor.window[0]
+            self._win_t0 = t0 if t0 > 0.0 else time.perf_counter()
+        self._win_tokens[req.uid] = self._win_tokens.get(req.uid, 0) + 1
+
+    def _flush_energy(self) -> None:
+        """Close the current window: split its joules by token counts."""
+        if self.monitor is None or self._win_t0 is None:
+            return
+        t1 = time.perf_counter()
+        joules = self.monitor.joules_between(self._win_t0, t1)
+        total = sum(self._win_tokens.values())
+        if total > 0 and joules > 0.0:
+            by_uid = {r.uid: r for r in self.finished}
+            for s in self.slots:
+                if s is not None:
+                    by_uid[s.uid] = s
+            for uid, n in self._win_tokens.items():
+                share = joules * n / total
+                if uid in by_uid:
+                    by_uid[uid].joules += share
+                self.attributed_joules += share
+        self._win_t0 = t1
+        self._win_tokens = {}
 
     # -- metrics -----------------------------------------------------------------
     def latency_summary(self) -> Dict[str, float]:
@@ -207,9 +348,25 @@ class ServingEngine:
         tpots = [r.tpot_s for r in self.finished]
         ttlts = [r.ttlt_s for r in self.finished]
         mean = lambda xs: sum(xs) / len(xs)
-        return {
+        out_tokens = sum(len(r.output_tokens) for r in self.finished)
+        t_first = min(r.submit_time for r in self.finished)
+        t_last = max(r.finish_time for r in self.finished)
+        span = max(t_last - t_first, 1e-9)
+        summary = {
             "requests": len(self.finished),
+            "truncated": sum(1 for r in self.finished if r.truncated),
+            "output_tokens": out_tokens,
+            "tokens_per_sec": out_tokens / span,
             "ttft_ms": mean(ttfts) * 1e3,
             "tpot_ms": mean(tpots) * 1e3,
             "ttlt_ms": mean(ttlts) * 1e3,
         }
+        for name, xs in (("ttft", ttfts), ("tpot", tpots), ("ttlt", ttlts)):
+            for q in (50, 95, 99):
+                summary[f"{name}_p{q}_ms"] = _percentile(xs, q) * 1e3
+        if self.monitor is not None:
+            total_j = sum(r.joules for r in self.finished)
+            summary["joules_total"] = total_j
+            summary["joules_per_request"] = total_j / len(self.finished)
+            summary["joules_per_token"] = total_j / max(out_tokens, 1)
+        return summary

@@ -1,4 +1,15 @@
-"""Token sampling strategies for the serving engine."""
+"""Token sampling strategies for the serving engine.
+
+Two layers:
+
+* ``sample``       — host-driven sampling for a single ``SamplingParams``
+  (used at prefill/admission time, and by the per-slot reference path).
+* ``sample_slots`` — fully batched, jit-friendly sampling where every slot
+  carries its *own* temperature / top-k as device arrays.  This is the
+  sampler fused into the device-resident decode step
+  (``serving.step.make_decode_sample_step``): greedy and stochastic slots
+  coexist in one batch without any host round-trip.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +18,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,3 +39,48 @@ def sample(logits: jax.Array, params: SamplingParams, key: jax.Array) -> jax.Arr
         cutoff = vals[..., -1:]
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_slots(
+    logits: jax.Array,
+    temperature: jax.Array,
+    top_k: jax.Array,
+    key: jax.Array,
+    *,
+    k_max: int = 64,
+) -> jax.Array:
+    """Batched sampling with per-slot params, all on device.
+
+    logits (B, V) float; temperature (B,) float32 (<= 0 -> greedy);
+    top_k (B,) int32 (0 -> no filter) -> tokens (B,) int32.
+
+    Greedy slots take ``argmax``; stochastic slots take a categorical draw
+    from temperature-scaled logits restricted to their own top-k set (the
+    cutoff is the k-th largest scaled logit, ties kept — identical
+    semantics to ``sample``).  ``k_max`` is the static bound on per-slot
+    top-k (a full per-slot sort would dominate the fused step at small
+    batch); slot values above it are clamped to ``k_max``.
+    """
+    B, V = logits.shape
+    k_max = min(k_max, V)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    scaled = logits.astype(jnp.float32) / temp
+    # per-slot top-k cutoff from one static-k selection; k == 0 -> keep all
+    top_vals = jax.lax.top_k(scaled, k_max)[0]          # (B, k_max) desc
+    idx = jnp.clip(top_k - 1, 0, k_max - 1)[:, None]
+    cutoff = jnp.take_along_axis(top_vals, idx, axis=-1)
+    cutoff = jnp.where((top_k > 0)[:, None], cutoff, -jnp.inf)
+    masked = jnp.where(scaled < cutoff, -jnp.inf, scaled)
+    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def params_as_arrays(params: SamplingParams):
+    """(temperature, top_k, eos, max_new) numpy scalars for one slot."""
+    return (
+        np.float32(params.temperature),
+        np.int32(params.top_k),
+        np.int32(params.eos_token),
+        np.int32(params.max_new_tokens),
+    )

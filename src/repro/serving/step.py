@@ -3,6 +3,13 @@
 ``make_prefill_step`` / ``make_decode_step`` return pure functions with the
 exact signatures the multi-pod dry-run lowers; shardings are attached by the
 caller (``launch.dryrun`` / ``serving.engine``).
+
+``make_decode_sample_step`` is the engine's device-resident fast path: one
+jitted function fuses the decode forward pass, per-slot sampling, PRNG key
+splitting, position/budget bookkeeping and finish detection.  The host feeds
+it a small ``state`` dict of per-slot device arrays and reads back a single
+packed (3, B) int32 array per step — the only host<->device sync in the
+steady-state decode loop.
 """
 
 from __future__ import annotations
@@ -14,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
+from repro.serving.sampling import sample_slots
 
 
 def make_prefill_step(cfg: ModelConfig) -> Callable:
@@ -33,3 +41,75 @@ def make_decode_step(cfg: ModelConfig) -> Callable:
 def make_serve_step(cfg: ModelConfig) -> Callable:
     """The dry-run `serve_step`: one new token against a seq_len KV cache."""
     return make_decode_step(cfg)
+
+
+def init_slot_state(max_batch: int, seed: int = 0) -> Dict[str, jax.Array]:
+    """Device-resident per-slot scheduler state for ``decode_sample_step``.
+
+    tokens      (B, 1) int32  — next input token per slot
+    positions   (B,)   int32  — next cache write position per slot
+    active      (B,)   bool   — slot is serving a live request
+    remaining   (B,)   int32  — new-token budget left (max_new minus emitted)
+    temperature (B,)   f32    — per-slot sampling temperature (<=0 greedy)
+    top_k       (B,)   int32  — per-slot top-k (0 = no filter)
+    eos         (B,)   int32  — per-slot EOS id (-1 = never)
+    key                PRNG   — split on device every step
+    """
+    B = max_batch
+    return {
+        "tokens": jnp.zeros((B, 1), jnp.int32),
+        "positions": jnp.zeros((B,), jnp.int32),
+        "active": jnp.zeros((B,), jnp.bool_),
+        "remaining": jnp.zeros((B,), jnp.int32),
+        "temperature": jnp.zeros((B,), jnp.float32),
+        "top_k": jnp.zeros((B,), jnp.int32),
+        "eos": jnp.full((B,), -1, jnp.int32),
+        "key": jax.random.PRNGKey(seed),
+    }
+
+
+def make_decode_sample_step(cfg: ModelConfig, max_len: int,
+                            k_max: int = 64) -> Callable:
+    """Fused decode + sample + finish-detect step (jit once, replay forever).
+
+    Returns ``step(params, state, cache) -> (state', cache', out)`` where
+    ``out`` is a packed (3, B) int32 array:
+
+      out[0] — token emitted this step per slot (garbage for idle slots)
+      out[1] — 1 where the slot finished on this step (EOS / budget / cap)
+      out[2] — 1 where the slot was active and therefore emitted out[0]
+
+    Idle slots keep re-feeding their last token at a frozen position, so the
+    compiled executable never changes shape; their writes land in their own
+    cache slot only and are overwritten on the next admission.
+    """
+
+    def step(params, state: Dict[str, jax.Array], cache) -> Tuple[Dict, Dict, jax.Array]:
+        logits, new_cache = model_lib.decode_step(
+            cfg, params, state["tokens"], state["positions"], cache)
+        key, sub = jax.random.split(state["key"])
+        tok = sample_slots(logits, state["temperature"], state["top_k"], sub,
+                           k_max=k_max)
+
+        active = state["active"]
+        act_i = active.astype(jnp.int32)
+        tok = jnp.where(active, tok, state["tokens"][:, 0])
+        positions = state["positions"] + act_i
+        remaining = state["remaining"] - act_i
+        hit_eos = (state["eos"] >= 0) & (tok == state["eos"])
+        done = active & (hit_eos | (remaining <= 0) | (positions >= max_len - 1))
+
+        new_state = {
+            "tokens": tok[:, None],
+            "positions": positions,
+            "active": active & ~done,
+            "remaining": remaining,
+            "temperature": state["temperature"],
+            "top_k": state["top_k"],
+            "eos": state["eos"],
+            "key": key,
+        }
+        out = jnp.stack([tok, done.astype(jnp.int32), act_i])
+        return new_state, new_cache, out
+
+    return step

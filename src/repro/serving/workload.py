@@ -1,0 +1,143 @@
+"""Traffic generation for the serving engine (open-loop load).
+
+The paper's headline metrics (TTFT/TPOT/TTLT, joules-per-token) are only
+meaningful under realistic serving conditions, so instead of submitting all
+prompts up front at t=0 the driver replays a *trace* of arrivals against
+the wall clock (open-loop: arrival times do not depend on service times).
+
+* ``WorkloadSpec`` + ``poisson_trace`` — Poisson arrivals at a target rate
+  with configurable prompt / output length distributions (fixed, uniform,
+  or lognormal), fully determined by the seed.
+* ``replay_trace`` — deterministic replay of an explicit
+  ``(time_s, prompt_len, max_new_tokens)`` schedule, for reproducible
+  A/B runs and tests.
+* ``OpenLoopDriver`` — interleaves trace arrivals with engine steps:
+  submits every request whose arrival time has passed, then runs one
+  engine step; sleeps only when the engine is idle and the next arrival
+  is in the future.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.sampling import SamplingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class LengthDist:
+    """Token-count distribution: fixed / uniform / lognormal."""
+
+    kind: str = "fixed"          # "fixed" | "uniform" | "lognormal"
+    mean: float = 64.0
+    low: int = 1                 # uniform lower bound / global clamp
+    high: int = 4096             # uniform upper bound / global clamp
+    sigma: float = 0.5           # lognormal shape
+
+    def sample(self, rng: np.random.Generator) -> int:
+        if self.kind == "fixed":
+            n = self.mean
+        elif self.kind == "uniform":
+            n = rng.integers(self.low, max(self.high, self.low + 1))
+        elif self.kind == "lognormal":
+            # parameterised so E[n] == mean
+            mu = np.log(max(self.mean, 1.0)) - 0.5 * self.sigma ** 2
+            n = rng.lognormal(mu, self.sigma)
+        else:
+            raise ValueError(f"unknown length dist {self.kind!r}")
+        return int(np.clip(round(float(n)), self.low, self.high))
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    arrival_rate: float = 4.0            # requests / second (Poisson)
+    num_requests: int = 8
+    prompt_len: LengthDist = LengthDist(kind="uniform", low=4, high=48)
+    output_len: LengthDist = LengthDist(kind="fixed", mean=16)
+    temperature: float = 0.8
+    top_k: int = 20
+    eos_token: int = -1
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Arrival:
+    time_s: float                        # offset from trace start
+    prompt: np.ndarray                   # (prompt_len,) int32
+    params: SamplingParams
+
+
+def poisson_trace(spec: WorkloadSpec, vocab_size: int) -> List[Arrival]:
+    """Sampled arrival schedule; same (spec, vocab_size) -> same trace."""
+    rng = np.random.default_rng(spec.seed)
+    arrivals: List[Arrival] = []
+    t = 0.0
+    for _ in range(spec.num_requests):
+        if spec.arrival_rate > 0:
+            t += float(rng.exponential(1.0 / spec.arrival_rate))
+        plen = spec.prompt_len.sample(rng)
+        prompt = rng.integers(0, vocab_size, plen).astype(np.int32)
+        arrivals.append(Arrival(
+            time_s=t, prompt=prompt,
+            params=SamplingParams(
+                temperature=spec.temperature, top_k=spec.top_k,
+                eos_token=spec.eos_token,
+                max_new_tokens=spec.output_len.sample(rng))))
+    return arrivals
+
+
+def replay_trace(
+    schedule: Sequence[Tuple[float, int, int]],
+    vocab_size: int,
+    *,
+    seed: int = 0,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    eos_token: int = -1,
+) -> List[Arrival]:
+    """Deterministic replay of (time_s, prompt_len, max_new_tokens) rows."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for t, plen, max_new in schedule:
+        prompt = rng.integers(0, vocab_size, int(plen)).astype(np.int32)
+        out.append(Arrival(
+            time_s=float(t), prompt=prompt,
+            params=SamplingParams(temperature=temperature, top_k=top_k,
+                                  eos_token=eos_token,
+                                  max_new_tokens=int(max_new))))
+    return out
+
+
+class OpenLoopDriver:
+    """Replay a trace against the wall clock while stepping the engine."""
+
+    def __init__(self, engine, arrivals: Iterable[Arrival],
+                 *, time_scale: float = 1.0, max_steps: int = 100_000):
+        self.engine = engine
+        self.arrivals = sorted(arrivals, key=lambda a: a.time_s)
+        self.time_scale = time_scale     # >1 compresses the trace (faster)
+        self.max_steps = max_steps
+
+    def run(self) -> List:
+        eng = self.engine
+        t0 = time.perf_counter()
+        i, steps = 0, 0
+        n = len(self.arrivals)
+        while (i < n or eng.busy) and steps < self.max_steps:
+            now = (time.perf_counter() - t0) * self.time_scale
+            while i < n and self.arrivals[i].time_s <= now:
+                a = self.arrivals[i]
+                eng.submit(a.prompt, a.params)
+                i += 1
+            if eng.busy:
+                eng.step()
+                steps += 1
+            elif i < n:
+                wait = (self.arrivals[i].time_s - now) / self.time_scale
+                time.sleep(min(max(wait, 0.0), 0.05))
+        eng.flush()
+        return eng.finished

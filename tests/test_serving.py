@@ -1,5 +1,5 @@
-"""Serving engine: slot-based continuous batching, latency accounting,
-decode correctness under mixed slot positions."""
+"""Serving engine: device-resident continuous batching, latency accounting,
+decode correctness under mixed slot positions, per-request energy."""
 
 import jax
 import jax.numpy as jnp
@@ -7,9 +7,26 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.energy import PowerMonitor, SyntheticReader
 from repro.models import model as model_lib
 from repro.serving.engine import ServingEngine
-from repro.serving.sampling import SamplingParams
+from repro.serving.sampling import SamplingParams, sample_slots
+
+
+def reference_greedy_stream(cfg, params, prompt, gen, max_len=64):
+    """The seed engine's per-slot path: batch=1 prefill + host decode loop."""
+    cache = model_lib.init_cache(cfg, 1, max_len, jnp.dtype(cfg.dtype))
+    logits, cache = model_lib.prefill(
+        cfg, params, {"tokens": jnp.asarray(prompt)[None]}, cache)
+    toks = [int(jnp.argmax(logits, -1)[0])]
+    pos = len(prompt)
+    for _ in range(gen - 1):
+        tok = jnp.asarray([[toks[-1]]], jnp.int32)
+        logits, cache = model_lib.decode_step(
+            cfg, params, tok, jnp.asarray(pos, jnp.int32), cache)
+        toks.append(int(jnp.argmax(logits, -1)[0]))
+        pos += 1
+    return toks
 
 
 @pytest.fixture(scope="module")
@@ -40,19 +57,7 @@ def test_engine_greedy_matches_reference_decode(small_model):
     rng = np.random.default_rng(1)
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
     gen = 5
-
-    # reference: manual loop at batch=1
-    cache = model_lib.init_cache(cfg, 1, 64, jnp.dtype(cfg.dtype))
-    logits, cache = model_lib.prefill(
-        cfg, params, {"tokens": jnp.asarray(prompt)[None]}, cache)
-    ref_tokens = [int(jnp.argmax(logits, -1)[0])]
-    pos = len(prompt)
-    for _ in range(gen - 1):
-        tok = jnp.asarray([[ref_tokens[-1]]], jnp.int32)
-        logits, cache = model_lib.decode_step(
-            cfg, params, tok, jnp.asarray(pos, jnp.int32), cache)
-        ref_tokens.append(int(jnp.argmax(logits, -1)[0]))
-        pos += 1
+    ref_tokens = reference_greedy_stream(cfg, params, prompt, gen)
 
     eng = ServingEngine(cfg, params, max_batch=2, max_len=64, prompt_bucket=8)
     eng.submit(prompt, SamplingParams(temperature=0.0, max_new_tokens=gen))
@@ -62,6 +67,103 @@ def test_engine_greedy_matches_reference_decode(small_model):
     finished = eng.run()
     got = next(r for r in finished if r.uid == 0).output_tokens
     assert got == ref_tokens
+
+
+def test_fused_step_matches_per_slot_reference_under_queue_pressure(small_model):
+    """Three greedy requests through two slots (queue pressure: the third is
+    admitted into a recycled slot) all reproduce the per-slot reference
+    streams token-for-token."""
+    cfg, params = small_model
+    rng = np.random.default_rng(3)
+    # bucket-aligned lengths so the engine's left-padded prefill sees the
+    # exact same context as the unpadded reference loop
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (8, 16, 8)]
+    gens = [4, 7, 5]
+    refs = [reference_greedy_stream(cfg, params, p, g)
+            for p, g in zip(prompts, gens)]
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64, prompt_bucket=8)
+    for p, g in zip(prompts, gens):
+        eng.submit(p, SamplingParams(temperature=0.0, max_new_tokens=g))
+    finished = eng.run()
+    assert len(finished) == 3
+    for uid, ref in enumerate(refs):
+        got = next(r for r in finished if r.uid == uid).output_tokens
+        assert got == ref, f"request {uid} diverged from reference"
+
+
+def test_engine_energy_attribution_sums_to_monitor_total(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64, prompt_bucket=8)
+    rng = np.random.default_rng(4)
+    for i in range(3):
+        eng.submit(rng.integers(0, cfg.vocab_size, 5 + i),
+                   SamplingParams(max_new_tokens=5))
+    mon = PowerMonitor(SyntheticReader(lambda t: 50.0), interval_s=0.02)
+    eng.attach_monitor(mon)
+    with mon:
+        finished = eng.run()
+    assert len(finished) == 3
+    assert all(r.joules > 0.0 for r in finished)
+    total = sum(r.joules for r in finished)
+    # attribution is internally exact ...
+    assert total == pytest.approx(eng.attributed_joules, rel=1e-9)
+    # ... and matches the monitor's measured total up to the (tiny) tail
+    # between the engine's final flush and the monitor's exit
+    assert total == pytest.approx(mon.result().joules, rel=0.1)
+
+
+def test_engine_truncates_long_prompts_keeping_tail(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=32, prompt_bucket=8)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+    eng.submit(prompt, SamplingParams(max_new_tokens=1))
+    finished = eng.run()
+    assert finished[0].truncated
+    assert eng.latency_summary()["truncated"] == 1
+    # the kept context is the *last* max_len - 1 tokens
+    ref = reference_greedy_stream(cfg, params, prompt[-31:], 1, max_len=32)
+    assert finished[0].output_tokens == ref
+
+
+def test_percentile_nearest_rank():
+    from repro.serving.engine import _percentile
+
+    assert _percentile([10.0, 20.0], 50) == 10.0
+    assert _percentile([1, 2, 3, 4], 50) == 2
+    assert _percentile([1, 2, 3, 4], 95) == 4
+    assert _percentile([5.0], 99) == 5.0
+
+
+def test_engine_clamps_top_k_consistently(small_model):
+    """Requests asking for top_k beyond the fused step's static bound are
+    clamped at submission, so the first (prefill) token and the decode
+    stream sample from the same distribution."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=64, top_k_max=16)
+    rng = np.random.default_rng(6)
+    eng.submit(rng.integers(0, cfg.vocab_size, 5),
+               SamplingParams(temperature=1.0, top_k=1000, max_new_tokens=2))
+    assert eng.queue[0].params.top_k == 16
+
+
+def test_sample_slots_mixed_params():
+    """Greedy slots take argmax; stochastic slots stay inside their top-k."""
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (4, 64)) * 2
+    temperature = jnp.asarray([0.0, 1.0, 0.0, 0.7], jnp.float32)
+    top_k = jnp.asarray([0, 3, 0, 5], jnp.int32)
+    for i in range(10):
+        tok = sample_slots(logits, temperature, top_k,
+                           jax.random.fold_in(key, i))
+        argmax = np.asarray(jnp.argmax(logits, -1))
+        assert int(tok[0]) == argmax[0] and int(tok[2]) == argmax[2]
+        for slot in (1, 3):
+            k = int(top_k[slot])
+            allowed = np.asarray(jax.lax.top_k(logits[slot], k)[1])
+            assert int(tok[slot]) in allowed
 
 
 def test_engine_eos_stops_early(small_model):
@@ -82,4 +184,15 @@ def test_serve_driver():
     from repro.launch.serve import main
 
     assert main(["--arch", "qwen1.5-0.5b", "--smoke", "--requests", "3",
-                 "--max-new", "4", "--max-batch", "2", "--max-len", "64"]) == 0
+                 "--max-new", "4", "--max-batch", "2", "--max-len", "64",
+                 "--power-reader", "synthetic"]) == 0
+
+
+def test_serve_driver_open_loop(capsys):
+    from repro.launch.serve import main
+
+    assert main(["--arch", "qwen1.5-0.5b", "--smoke", "--requests", "3",
+                 "--max-new", "4", "--max-batch", "2", "--max-len", "64",
+                 "--arrival-rate", "8", "--power-reader", "synthetic"]) == 0
+    out = capsys.readouterr().out
+    assert "ttft_p99_ms" in out and "J/Req" in out
