@@ -49,22 +49,25 @@ def _classify(path) -> str:
     for k in keys:
         if k in ("cross_k", "cross_v"):
             return "cross"
-        if k in ("pos", "ring"):
+        if k in ("pos", "ring", "block_tables"):
             return "meta"
     # inside a "self" attn entry -> kv; recurrent state names -> state
     if any(k == "self" for k in keys):
         return "kv"
-    if keys[-1] in ("k", "v"):
+    if keys[-1] in ("k", "v", "kp", "vp"):
         return "kv"
     return "state"
 
 
 def profile_cache(
-    cfg: ModelConfig, batch: int, seq_len: int, dtype=None
+    cfg: ModelConfig, batch: int, seq_len: int, dtype=None,
+    *, layout: str = "contiguous", block_size: int = 16, num_blocks: int = 0,
 ) -> CacheReport:
     dtype = dtype or jnp.dtype(cfg.dtype)
     tree = jax.eval_shape(
-        lambda: model_lib.init_cache(cfg, batch, seq_len, dtype)
+        lambda: model_lib.init_cache(cfg, batch, seq_len, dtype, layout=layout,
+                                     block_size=block_size,
+                                     num_blocks=num_blocks)
     )
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     by_kind: Dict[str, int] = {"kv": 0, "state": 0, "cross": 0, "meta": 0}
@@ -94,4 +97,25 @@ def analytic_kv_bytes(cfg: ModelConfig, batch: int, seq_len: int,
         else:
             continue
         total += 2 * batch * length * cfg.num_kv_heads * cfg.resolved_head_dim * itemsize
+    return total
+
+
+def paged_kv_bytes(cfg: ModelConfig, lengths, block_size: int,
+                   itemsize: int = 2, max_len: int = 0) -> int:
+    """Attention-KV bytes a paged cache *allocates* for per-request token
+    counts ``lengths`` (prompt + generated): full-context layers consume
+    ``ceil(len / block_size)`` pool blocks per request, while sliding-window
+    layers keep their ring buffers — a fixed ``min(window, max_len)`` per
+    resident request regardless of its length (paging does not change
+    them).  The worst-case contiguous comparison point is
+    ``analytic_kv_bytes(cfg, len(lengths), max_len)``."""
+    max_len = max_len or max((int(n) for n in lengths), default=0)
+    per_tok = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * itemsize
+    blocks = sum(-(-int(n) // block_size) for n in lengths)
+    total = 0
+    for kind in cfg.blocks():
+        if kind == "attn":
+            total += blocks * block_size * per_tok
+        elif kind == "local_attn":
+            total += len(lengths) * min(cfg.sliding_window, max_len) * per_tok
     return total

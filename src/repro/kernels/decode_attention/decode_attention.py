@@ -1,5 +1,5 @@
 """Pallas TPU decode attention: one query token per sequence over a long
-(possibly ring-buffered) KV cache.
+(possibly ring-buffered) KV cache, plus the paged (block-pool) variant.
 
 TPU-native design:
   * GQA grouping is exploited for MXU utilization: the G query heads that
@@ -10,6 +10,15 @@ TPU-native design:
     FlashDecoding mapped onto the sequential-grid + scratch idiom.
   * ring-buffer validity and windowing come from the absolute-position
     tile, same convention as the flash kernel.
+
+``paged_decode_attention`` reuses the same online-softmax body but reads
+K/V straight out of a global block pool: the per-sequence block table is a
+scalar-prefetch operand (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec
+index map resolves logical kv-block ``ki`` of sequence ``b`` to physical
+pool block ``table[b, ki]`` before the DMA is issued — no gather/copy of
+the cache ever materializes.  Key positions are synthesized from the grid
+(``ki * block_size + iota``): gathered index == absolute position, so
+causal masking hides the unwritten tail and garbage-block table entries.
 """
 
 from __future__ import annotations
@@ -128,4 +137,112 @@ def decode_attention(
         interpret=interpret,
     )(q_positions.astype(jnp.int32), k_positions.astype(jnp.int32),
       qg, k_cache, v_cache)
+    return out.reshape(B, 1, Hq, D)
+
+
+def _paged_kernel(
+    bt_ref,                     # scalar-prefetch: (B, nb) int32 block table
+    q_pos_ref,                  # (1, 1) int32
+    q_ref,                      # (1, 1, G, D)
+    k_ref, v_ref,               # (1, bs, 1, D) — physical block via index map
+    o_ref,                      # (1, 1, G, D)
+    acc_ref, m_ref, l_ref,      # VMEM scratch: (G, D), (G, 1), (G, 1) f32
+    *,
+    window: int,
+    softcap: float,
+    scale: float,
+    num_kv_blocks: int,
+    block_size: int,
+):
+    del bt_ref  # consumed by the index maps
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_pos_ref[0, 0]
+    k_pos = ki * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)[0]
+    valid = k_pos <= q_pos
+    if window > 0:
+        valid = valid & (q_pos - k_pos < window)
+
+    @pl.when(jnp.any(valid))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                  # (G, bs)
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
+        s = jnp.where(valid[None, :], s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[:, 0] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "interpret")
+)
+def paged_decode_attention(
+    q: jax.Array,              # (B, 1, Hq, D)
+    k_pool: jax.Array,         # (N, bs, Hkv, D) global block pool
+    v_pool: jax.Array,         # (N, bs, Hkv, D)
+    block_tables: jax.Array,   # (B, nb) int32 pool indices
+    q_positions: jax.Array,    # (B, 1) int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    assert S == 1, "decode kernel is single-token"
+    _, bs, Hkv, _ = k_pool.shape
+    G = Hq // Hkv
+    nb = block_tables.shape[1]
+    grid = (B, Hkv, nb)
+    qg = q.reshape(B, 1, Hkv * G, D)
+
+    kernel = functools.partial(
+        _paged_kernel, window=window, softcap=softcap,
+        scale=1.0 / math.sqrt(D), num_kv_blocks=nb, block_size=bs,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ki, bt: (b, 0)),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki, bt: (b, 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, ki, bt: (bt[b, ki], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, ki, bt: (bt[b, ki], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki, bt: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hq, D), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), q_positions.astype(jnp.int32),
+      qg, k_pool, v_pool)
     return out.reshape(B, 1, Hq, D)

@@ -7,6 +7,9 @@ import jax
 from repro.kernels.decode_attention.decode_attention import (
     decode_attention as _pallas,
 )
+from repro.kernels.decode_attention.decode_attention import (
+    paged_decode_attention as _pallas_paged,
+)
 
 
 def _pick_block(L: int) -> int:
@@ -22,4 +25,14 @@ def decode_attention(q, k_cache, v_cache, *, q_positions, k_positions,
         q, k_cache, v_cache, q_positions, k_positions,
         window=window, softcap=softcap,
         block_kv=_pick_block(k_cache.shape[1]), interpret=interpret,
+    )
+
+
+def paged_decode_attention(q, k_pool, v_pool, *, block_tables, q_positions,
+                           window=0, softcap=0.0, interpret=False):
+    """Paged variant: kv tiles DMA'd straight from the pool via the
+    scalar-prefetched block table (tile size == pool block size)."""
+    return _pallas_paged(
+        q, k_pool, v_pool, block_tables, q_positions,
+        window=window, softcap=softcap, interpret=interpret,
     )

@@ -1,8 +1,15 @@
-"""Pure-jnp oracle for the decode-attention kernel.
+"""Pure-jnp oracles for the decode-attention kernels.
 
-Single new query token per sequence attends over a (possibly ring-buffered)
-KV cache.  Slots with k_position == -1 are unfilled and masked; window
-masking uses absolute positions so ring buffers work unchanged.
+``decode_attention``: single new query token per sequence attends over a
+(possibly ring-buffered) contiguous KV cache.  Slots with k_position == -1
+are unfilled and masked; window masking uses absolute positions so ring
+buffers work unchanged.
+
+``paged_decode_attention``: same math over a paged cache — K/V are gathered
+from a global block pool through a per-sequence block table, and key
+positions are synthesized (gathered index j == absolute position j), so
+causal masking hides both the unwritten tail of the last block and any
+garbage-block table entries (their positions all exceed the query's).
 """
 
 from __future__ import annotations
@@ -41,3 +48,25 @@ def decode_attention(
     probs = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v_cache.dtype), v_cache)
     return o.reshape(B, S, Hq, D)
+
+
+def paged_decode_attention(
+    q: jax.Array,              # (B, 1, Hq, D)
+    k_pool: jax.Array,         # (N, bs, Hkv, D) global block pool
+    v_pool: jax.Array,         # (N, bs, Hkv, D)
+    *,
+    block_tables: jax.Array,   # (B, max_blocks) int32 pool indices
+    q_positions: jax.Array,    # (B, 1)
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, nb = block_tables.shape
+    bs = k_pool.shape[1]
+    L = nb * bs
+    k = k_pool[block_tables].reshape(B, L, *k_pool.shape[2:])
+    v = v_pool[block_tables].reshape(B, L, *v_pool.shape[2:])
+    k_positions = jnp.broadcast_to(
+        jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    return decode_attention(
+        q, k, v, q_positions=q_positions, k_positions=k_positions,
+        window=window, softcap=softcap)

@@ -102,6 +102,23 @@ def decode_attention(q, k_cache, v_cache, *, q_positions, k_positions,
     )
 
 
+def paged_decode_attention(q, k_pool, v_pool, *, block_tables, q_positions,
+                           window=0, softcap=0.0):
+    """Decode attention over a paged (block-pool) KV cache."""
+    if _use_pallas():
+        from repro.kernels.decode_attention import ops
+        return ops.paged_decode_attention(
+            q, k_pool, v_pool, block_tables=block_tables,
+            q_positions=q_positions, window=window, softcap=softcap,
+            interpret=_interpret(),
+        )
+    from repro.kernels.decode_attention import ref
+    return ref.paged_decode_attention(
+        q, k_pool, v_pool, block_tables=block_tables,
+        q_positions=q_positions, window=window, softcap=softcap,
+    )
+
+
 def linear_recurrence(a, b, h0):
     """h_t = a_t * h_{t-1} + b_t over axis 1.  a,b: (B,S,W) fp32; h0: (B,W)."""
     if _use_pallas():

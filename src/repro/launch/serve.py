@@ -74,6 +74,15 @@ def main(argv=None) -> int:
                          "(overrides --arrival-rate)")
     ap.add_argument("--power-reader", default="proc",
                     choices=["proc", "model", "synthetic", "none"])
+    ap.add_argument("--cache-layout", default="contiguous",
+                    choices=["contiguous", "paged"],
+                    help="KV layout: worst-case contiguous slots or a "
+                         "shared block pool with per-slot block tables")
+    ap.add_argument("--kv-block-size", type=int, default=16)
+    ap.add_argument("--kv-num-blocks", type=int, default=0,
+                    help="paged pool size in blocks (0 = worst case); "
+                         "smaller pools trade admission backpressure for "
+                         "device memory")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -104,7 +113,10 @@ def main(argv=None) -> int:
     with rules.use_mesh(make_host_mesh()):
         params, _ = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
         engine = ServingEngine(cfg, params, max_batch=args.max_batch,
-                               max_len=args.max_len, seed=args.seed)
+                               max_len=args.max_len, seed=args.seed,
+                               cache_layout=args.cache_layout,
+                               kv_block_size=args.kv_block_size,
+                               kv_num_blocks=args.kv_num_blocks)
         driver = OpenLoopDriver(engine, arrivals)
         if reader is not None:
             monitor = PowerMonitor(reader)

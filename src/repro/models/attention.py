@@ -126,8 +126,15 @@ def apply_attention_prefill(
     kv_cache: Dict,
     *,
     window: int = 0,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
-    """Causal attention over the prompt; returns output + filled KV cache."""
+    """Causal attention over the prompt; returns output + filled KV cache.
+
+    The attention math is layout-independent (the prompt is self-contained);
+    only the cache write differs: paged entries (``kp`` in the dict) scatter
+    K/V into pool blocks through ``block_tables``, contiguous/ring entries
+    take the dense fill.
+    """
     q = _project_q(p, x, cfg)
     k, v = _project_kv(p, x, cfg)
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -137,7 +144,11 @@ def apply_attention_prefill(
         q_positions=positions, k_positions=positions,
         causal=True, window=window, softcap=cfg.logit_softcap,
     )
-    kv_cache = cache_lib.fill_attn_cache(kv_cache, k, v, positions)
+    if "kp" in kv_cache:
+        kv_cache = cache_lib.fill_paged_cache(kv_cache, k, v, positions,
+                                              block_tables)
+    else:
+        kv_cache = cache_lib.fill_attn_cache(kv_cache, k, v, positions)
     return _out_proj(p, o), kv_cache
 
 
@@ -149,6 +160,7 @@ def apply_attention_decode(
     kv_cache: Dict,
     *,
     window: int = 0,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     B = x.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (B,))
@@ -157,6 +169,15 @@ def apply_attention_decode(
     k_new, v_new = _project_kv(p, x, cfg)
     q = apply_rope(q, pos_b, cfg.rope_theta)
     k_new = apply_rope(k_new, pos_b, cfg.rope_theta)
+    if "kp" in kv_cache:  # paged: append via block table, attend on the pool
+        kv_cache = cache_lib.update_paged_cache(
+            kv_cache, k_new, v_new, positions, block_tables)
+        o = dispatch.paged_decode_attention(
+            q, kv_cache["kp"], kv_cache["vp"],
+            block_tables=block_tables, q_positions=pos_b,
+            window=window, softcap=cfg.logit_softcap,
+        )
+        return _out_proj(p, o), kv_cache
     kv_cache = cache_lib.update_attn_cache(kv_cache, k_new, v_new, positions)
     o = dispatch.decode_attention(
         q, kv_cache["k"], kv_cache["v"],

@@ -1,10 +1,26 @@
-"""Decode-time caches: full KV, ring-buffer (sliding window) KV, recurrent
-state, and cross-attention memory.
+"""Decode-time caches: full KV, paged (block-pool) KV, ring-buffer (sliding
+window) KV, recurrent state, and cross-attention memory.
 
 A cache entry is a plain dict of arrays so the whole cache is a pytree that
-rides through ``jax.jit`` / ``lax.scan``.  Absolute key positions are stored
-explicitly (``pos``; -1 = unfilled) which makes ring buffers, masking, and
-RoPE-at-write-time uniform across cache kinds.
+rides through ``jax.jit`` / ``lax.scan``.  Two layouts for full-context
+attention KV:
+
+* **contiguous** — per-slot ``(batch, max_len, H, D)`` regions with explicit
+  absolute key positions (``pos``; -1 = unfilled), which makes ring buffers,
+  masking, and RoPE-at-write-time uniform across cache kinds.
+* **paged** — a global block pool ``kp``/``vp`` of shape ``(num_blocks,
+  block_size, H, D)`` shared by every slot, addressed through an int32
+  block table ``(batch, max_blocks_per_slot)``.  Token at absolute position
+  ``p`` of slot ``s`` lives at ``pool[table[s, p // bs], p % bs]``, so a
+  slot only consumes the blocks its actual length needs instead of a
+  worst-case ``max_len`` stripe.  Block 0 is a reserved garbage block:
+  idle slots keep writing their frozen token there (static-shape decode),
+  and freed slots point their whole table row back at it.  No ``pos``
+  array is needed — gathered key index ``j`` *is* absolute position ``j``,
+  and causal masking hides everything past the slot's length.
+
+Sliding-window (``local_attn``) caches keep the ring layout in both modes:
+their memory is already bounded by the window, so paging buys nothing.
 """
 
 from __future__ import annotations
@@ -15,6 +31,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
+
+GARBAGE_BLOCK = 0  # pool block reserved for idle-slot writes; never allocated
+
+
+def blocks_per_slot(max_len: int, block_size: int) -> int:
+    """Block-table width needed to address ``max_len`` tokens."""
+    return -(-max_len // block_size)
+
+
+def default_num_blocks(batch: int, max_len: int, block_size: int) -> int:
+    """Worst-case pool: every slot full, plus the reserved garbage block."""
+    return batch * blocks_per_slot(max_len, block_size) + 1
 
 
 def init_attn_cache(
@@ -71,6 +99,63 @@ def update_attn_cache(cache: Dict, k_new: jax.Array, v_new: jax.Array,
     return {"k": k, "v": v, "pos": pos, "ring": cache["ring"]}
 
 
+# -- paged (block-pool) attention cache --------------------------------------
+
+def init_paged_attn_cache(
+    num_blocks: int, block_size: int, n_kv: int, head_dim: int, dtype
+) -> Dict:
+    return {
+        "kp": jnp.zeros((num_blocks, block_size, n_kv, head_dim), dtype),
+        "vp": jnp.zeros((num_blocks, block_size, n_kv, head_dim), dtype),
+    }
+
+
+def fill_paged_cache(
+    cache: Dict, k: jax.Array, v: jax.Array, positions: jax.Array,
+    block_tables: jax.Array,
+) -> Dict:
+    """Scatter a full prefill's K/V (B, S, H, D) into pool blocks.
+
+    The prompt occupies absolute positions 0..S-1, so row ``b`` fills table
+    entries ``0..ceil(S/bs)-1`` of ``block_tables[b]`` in order.  S is
+    padded up to a whole number of blocks; the pad tail lands at positions
+    >= S inside the last block and is hidden by causal masking.
+    """
+    del positions  # prompt positions are 0..S-1 by construction
+    B, S = k.shape[:2]
+    bs = cache["kp"].shape[1]
+    nb = -(-S // bs)
+    pad = nb * bs - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    idx = block_tables[:, :nb].reshape(-1)
+    kb = k.reshape(B * nb, bs, *k.shape[2:]).astype(cache["kp"].dtype)
+    vb = v.reshape(B * nb, bs, *v.shape[2:]).astype(cache["vp"].dtype)
+    return {"kp": cache["kp"].at[idx].set(kb), "vp": cache["vp"].at[idx].set(vb)}
+
+
+def update_paged_cache(
+    cache: Dict, k_new: jax.Array, v_new: jax.Array, positions: jax.Array,
+    block_tables: jax.Array,
+) -> Dict:
+    """Write one decoded token's K/V (B, 1, H, D) at per-row ``positions``.
+
+    Active slots always have the covering block allocated (admission
+    reserves blocks for prompt + budget); idle slots' tables point at the
+    garbage block, so their static-shape writes land in trash.
+    """
+    B = block_tables.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (B,))
+    bs = cache["kp"].shape[1]
+    rows = jnp.arange(B)
+    blk = block_tables[rows, positions // bs]
+    off = positions % bs
+    kp = cache["kp"].at[blk, off].set(k_new[:, 0].astype(cache["kp"].dtype))
+    vp = cache["vp"].at[blk, off].set(v_new[:, 0].astype(cache["vp"].dtype))
+    return {"kp": kp, "vp": vp}
+
+
 # -- recurrent states --------------------------------------------------------
 
 def init_rglru_state(batch: int, width: int, conv_width: int, dtype) -> Dict:
@@ -105,11 +190,18 @@ def init_slstm_state(batch: int, heads: int, dh: int, conv_width: int, dtype) ->
 
 # -- per-block cache constructors -------------------------------------------
 
-def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype) -> Dict:
+def init_block_cache(
+    cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype,
+    *, layout: str = "contiguous", block_size: int = 16,
+    num_blocks: int = 0,
+) -> Dict:
     hd = cfg.resolved_head_dim
     if kind == "ffn":
         return {}
     if kind == "attn":
+        if layout == "paged":
+            n = num_blocks or default_num_blocks(batch, max_len, block_size)
+            return init_paged_attn_cache(n, block_size, cfg.num_kv_heads, hd, dtype)
         return init_attn_cache(batch, max_len, cfg.num_kv_heads, hd, dtype)
     if kind == "local_attn":
         return init_attn_cache(

@@ -160,6 +160,7 @@ def _apply_block_seq(
     *,
     causal: bool,
     fill_cache: bool,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full-sequence block (train / prefill / encoder)."""
     new_entry: Optional[Dict] = None
@@ -168,7 +169,8 @@ def _apply_block_seq(
         h = apply_norm(p["norm1"], x, cfg.norm_eps)
         if fill_cache:
             a, self_cache = attn_lib.apply_attention_prefill(
-                p["attn"], h, cfg, positions, cache_entry["self"], window=window
+                p["attn"], h, cfg, positions, cache_entry["self"],
+                window=window, block_tables=block_tables
             )
             new_entry = {"self": self_cache}
         else:
@@ -222,12 +224,14 @@ def _apply_block_decode(
     x: jax.Array,
     position: jax.Array,
     cache_entry: Dict,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     if kind in ("attn", "local_attn"):
         window = cfg.sliding_window if kind == "local_attn" else 0
         h = apply_norm(p["norm1"], x, cfg.norm_eps)
         a, self_cache = attn_lib.apply_attention_decode(
-            p["attn"], h, cfg, position, cache_entry["self"], window=window
+            p["attn"], h, cfg, position, cache_entry["self"], window=window,
+            block_tables=block_tables
         )
         new_entry = dict(cache_entry)
         new_entry["self"] = self_cache
@@ -280,6 +284,7 @@ def _apply_stack_seq(
     *,
     causal: bool,
     remat: bool,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     pattern = cfg.block_pattern
     fill = cache is not None
@@ -291,7 +296,7 @@ def _apply_stack_seq(
             entry = group_cache[str(i)] if fill else None
             x, new_entry = _apply_block_seq(
                 group_params[str(i)], cfg, kind, x, positions, entry, memory,
-                causal=causal, fill_cache=fill,
+                causal=causal, fill_cache=fill, block_tables=block_tables,
             )
             if fill:
                 new_cache[str(i)] = new_entry
@@ -329,7 +334,7 @@ def _apply_stack_seq(
             entry = cache["rest"][str(i)] if fill else None
             x, new_entry = _apply_block_seq(
                 stack["rest"][str(i)], cfg, kind, x, positions, entry, memory,
-                causal=causal, fill_cache=fill,
+                causal=causal, fill_cache=fill, block_tables=block_tables,
             )
             if fill:
                 new_rest[str(i)] = new_entry
@@ -345,6 +350,7 @@ def _apply_stack_decode(
     x: jax.Array,
     position: jax.Array,
     cache: Dict,
+    block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     pattern = cfg.block_pattern
     n_groups, n_rest = cfg.layer_groups()
@@ -355,7 +361,8 @@ def _apply_stack_decode(
             nc = {}
             for i, kind in enumerate(pattern):
                 x, nc[str(i)] = _apply_block_decode(
-                    gp[str(i)], cfg, kind, x, position, gc[str(i)]
+                    gp[str(i)], cfg, kind, x, position, gc[str(i)],
+                    block_tables
                 )
             return x, nc
 
@@ -373,7 +380,8 @@ def _apply_stack_decode(
         nr = {}
         for i, kind in enumerate(pattern[:n_rest]):
             x, nr[str(i)] = _apply_block_decode(
-                stack["rest"][str(i)], cfg, kind, x, position, cache["rest"][str(i)]
+                stack["rest"][str(i)], cfg, kind, x, position,
+                cache["rest"][str(i)], block_tables
             )
         new_cache["rest"] = nr
     x = apply_norm(stack["final_norm"], x, cfg.norm_eps)
@@ -438,13 +446,27 @@ def param_axes(cfg: ModelConfig):
     return shapes, captured["axes"]
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
-    """Decode cache for the decoder stack (stacked to mirror param groups)."""
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype,
+    *, layout: str = "contiguous", block_size: int = 16,
+    num_blocks: int = 0,
+) -> Dict:
+    """Decode cache for the decoder stack (stacked to mirror param groups).
+
+    ``layout="paged"`` swaps full-context attention entries for global block
+    pools (``num_blocks`` x ``block_size``; 0 -> worst-case sizing) shared
+    by all slots and addressed through the caller's block tables.  Ring
+    (sliding-window), recurrent, and cross-attention entries are identical
+    in both layouts.
+    """
+    assert layout in ("contiguous", "paged"), layout
     pattern = cfg.block_pattern
     n_groups, n_rest = cfg.layer_groups()
 
     def entry(kind):
-        c = cache_lib.init_block_cache(cfg, kind, batch, max_len, dtype)
+        c = cache_lib.init_block_cache(
+            cfg, kind, batch, max_len, dtype,
+            layout=layout, block_size=block_size, num_blocks=num_blocks)
         if kind in ("attn", "local_attn"):
             c = {"self": c}
             if cfg.is_encdec:
@@ -469,9 +491,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
 
 
 def prefill(
-    cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict, *, remat: bool = False
+    cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict, *,
+    remat: bool = False, block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
-    """Process the prompt, fill the cache; returns last-position logits."""
+    """Process the prompt, fill the cache; returns last-position logits.
+
+    For a paged cache, ``block_tables`` (B, max_blocks) names the pool
+    blocks each row's prompt K/V scatters into.
+    """
     x = _embed_inputs(cfg, params, batch)
     positions = jnp.broadcast_to(
         jnp.arange(x.shape[1], dtype=jnp.int32)[None], x.shape[:2]
@@ -488,7 +515,7 @@ def prefill(
         )
     x, new_cache = _apply_stack_seq(
         params["decoder"], cfg, x, positions, cache, memory,
-        causal=True, remat=remat,
+        causal=True, remat=remat, block_tables=block_tables,
     )
     logits = unembed(params.get("lm_head", params["embed"]), x[:, -1:],
                      cfg.logit_softcap)[:, 0]
@@ -496,12 +523,15 @@ def prefill(
 
 
 def decode_step(
-    cfg: ModelConfig, params: Dict, token: jax.Array, position: jax.Array, cache: Dict
+    cfg: ModelConfig, params: Dict, token: jax.Array, position: jax.Array,
+    cache: Dict, block_tables: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
-    """One decode step.  token (B, 1) int32; position scalar or (B,) int32."""
+    """One decode step.  token (B, 1) int32; position scalar or (B,) int32.
+    ``block_tables`` (B, max_blocks) int32 is required for paged caches."""
     position = jnp.broadcast_to(
         jnp.asarray(position, jnp.int32), (token.shape[0],))
     x = embed_tokens(params["embed"], token, cfg.emb_scale, cfg.d_model)
-    x, new_cache = _apply_stack_decode(params["decoder"], cfg, x, position, cache)
+    x, new_cache = _apply_stack_decode(params["decoder"], cfg, x, position,
+                                       cache, block_tables)
     logits = unembed(params.get("lm_head", params["embed"]), x, cfg.logit_softcap)[:, 0]
     return logits, new_cache

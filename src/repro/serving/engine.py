@@ -1,25 +1,46 @@
-"""Device-resident continuous-batching serving engine.
+"""Device-resident continuous-batching serving engine with paged KV cache.
 
 Design (vLLM-lite, static-shape TPU-friendly):
 
 * **One fused jitted step** (``serving.step.make_decode_sample_step``)
   performs decode forward + per-slot sampling + finish detection.  All
   per-slot scheduler state — next tokens, positions, active mask, sampling
-  params (temperature / top-k / EOS), remaining-token budgets, and the PRNG
-  key — lives on device and threads through the step without touching the
-  host.  The executable is compiled once for (max_batch, max_len) and
-  replayed every step (the paper's CUDA-graph-cached generation, in jit
-  form).
+  params (temperature / top-k / EOS), remaining-token budgets, block
+  tables, and the PRNG key — lives on device and threads through the step
+  without touching the host.  The executable is compiled once for
+  (max_batch, max_len) and replayed every step (the paper's
+  CUDA-graph-cached generation, in jit form); on accelerators the cache
+  and state buffers are **donated** into the step so XLA updates the KV
+  cache in place instead of round-tripping a copy through the allocator.
 * **One host sync per step.**  The step returns a packed (3, B) int32 array
   (token, done-flag, emitted-flag per slot); the host fetches it with a
   single transfer and appends the token vector to a numpy ring buffer.  No
   ``int(t[0])`` per slot, no per-slot sampling dispatches.
-* **Continuous batching.**  Waiting requests are admitted whenever a slot
-  frees; their prompt is prefilled at a bucketed length (batch=1) and the
-  resulting KV written into the batched cache via ``dynamic_update_slice``.
-  Admission updates the device state with O(1)-sized ``.at[slot].set``
-  writes — lazy device ops, not syncs.  Prompts longer than ``max_len - 1``
-  keep their *last* ``plen`` tokens and are flagged ``truncated``.
+* **Paged KV cache** (``cache_layout="paged"``).  Instead of reserving a
+  worst-case contiguous ``(max_batch, max_len)`` KV stripe per slot, each
+  full-context attention layer keeps a global block pool ``(num_blocks,
+  block_size, H, D)`` shared by every slot.  A host-managed free stack
+  hands out blocks at admission — enough to cover the prompt plus the
+  request's ``max_new_tokens`` budget, so the in-step append never
+  allocates — and ``_finish`` pushes them back for reuse.  The per-slot
+  int32 block table rides in the device state; the fused step's append
+  writes token ``p`` to ``pool[table[slot, p // bs], p % bs]`` and the
+  Pallas decode kernel resolves the table via scalar prefetch (no gather
+  materializes).  Pool block 0 is reserved garbage: idle slots write their
+  frozen token there, keeping the executable static-shape.  When the free
+  stack can't cover the head-of-queue request, admission stops (FCFS
+  backpressure) until running requests finish and return blocks.
+  Sliding-window layers keep their ring buffers (already window-bounded);
+  the contiguous layout remains selectable and both layouts emit identical
+  token streams for identical seeds.
+* **Batched continuous admission.**  Whenever slots free, every waiting
+  request sharing the head-of-queue's prompt-length bucket is prefilled in
+  *one* batched call (instead of batch=1 per admit); the resulting KV is
+  written into the batched cache per slot (contiguous) or scattered into
+  freshly allocated pool blocks (paged).  Admission updates the device
+  state with O(1)-sized ``.at[slot].set`` writes — lazy device ops, not
+  syncs.  Prompts longer than ``max_len - 1`` keep their *last* ``plen``
+  tokens and are flagged ``truncated``.
 * **Open-loop friendly.**  ``step()`` performs one admit+decode round so a
   traffic driver (``serving.workload``) can interleave Poisson arrivals
   with engine work; ``run()`` is the closed-loop drain used by tests.
@@ -30,8 +51,7 @@ Design (vLLM-lite, static-shape TPU-friendly):
   are split over the requests proportionally to the tokens they emitted in
   that window and accumulated on ``Request.joules``.
 
-Follow-on work (paged KV, chunked prefill) is tracked in ROADMAP.md
-§Serving.
+Follow-on work (chunked prefill) is tracked in ROADMAP.md §Serving.
 """
 
 from __future__ import annotations
@@ -46,10 +66,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.energy import PowerMonitor
+from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
 from repro.serving.sampling import SamplingParams, sample
-from repro.serving.step import init_slot_state, make_decode_sample_step
+from repro.serving.step import (init_slot_state, make_decode_sample_step,
+                                maybe_donate)
 
 _RING = 64  # host-side token ring buffer depth (tokens per slot per flush)
 
@@ -58,7 +80,9 @@ _RING = 64  # host-side token ring buffer depth (tokens per slot per flush)
 class Request:
     uid: int
     prompt: np.ndarray                 # (prompt_len,) int32
-    params: SamplingParams = SamplingParams()
+    # default_factory: a shared default instance would alias any future
+    # mutable sampling fields across every request that omitted params
+    params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     # filled by the engine:
     submit_time: float = 0.0
     first_token_time: float = 0.0
@@ -100,32 +124,70 @@ class ServingEngine:
         seed: int = 0,
         monitor: Optional[PowerMonitor] = None,
         top_k_max: int = 64,
+        cache_layout: str = "contiguous",
+        kv_block_size: int = 16,
+        kv_num_blocks: int = 0,
     ):
+        assert cache_layout in ("contiguous", "paged"), cache_layout
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.prompt_bucket = prompt_bucket
+        self.layout = cache_layout
         # static bound on per-request top-k inside the fused step (a full
         # per-slot vocab sort would dominate it); requests asking for more
         # are clamped — consistently, first token included
         self.top_k_max = min(top_k_max, cfg.vocab_size)
         self.key = jax.random.PRNGKey(seed)  # host-side key for prefill sampling
         dtype = jnp.dtype(cfg.dtype)
-        self.cache = model_lib.init_cache(cfg, max_batch, max_len, dtype)
-        # one-slot prefill cache template (prefill runs at batch=1 per admit)
-        self._slot_cache_tmpl = model_lib.init_cache(cfg, 1, max_len, dtype)
+        self._dtype = dtype
+
+        # paged block-pool bookkeeping (host-managed free stack)
+        self.block_size = kv_block_size
+        self.max_blocks_per_slot = cache_lib.blocks_per_slot(max_len, kv_block_size)
+        if cache_layout == "paged":
+            self.num_blocks = kv_num_blocks or cache_lib.default_num_blocks(
+                max_batch, max_len, kv_block_size)
+            assert self.num_blocks - 1 >= self.max_blocks_per_slot, (
+                f"pool of {self.num_blocks} blocks (block 0 reserved) cannot "
+                f"hold one worst-case request of {self.max_blocks_per_slot} "
+                f"blocks")
+            # LIFO free stack over blocks 1..N-1 (0 = reserved garbage block)
+            self._free_blocks: List[int] = list(range(self.num_blocks - 1, 0, -1))
+        else:
+            self.num_blocks = 0
+            self._free_blocks = []
+        self._slot_blocks: List[List[int]] = [[] for _ in range(max_batch)]
+        self.peak_blocks_in_use = 0
+
+        self.cache = model_lib.init_cache(
+            cfg, max_batch, max_len, dtype, layout=cache_layout,
+            block_size=kv_block_size, num_blocks=self.num_blocks)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: deque = deque()
         self.finished: List[Request] = []
         self._uid = 0
 
-        # device-resident scheduler state + fused step
-        self._state = init_slot_state(max_batch, seed=seed + 1)
-        self._step = jax.jit(
-            make_decode_sample_step(cfg, max_len, k_max=self.top_k_max))
+        # device-resident scheduler state + fused step (cache/state donated
+        # into the step on backends that support it)
+        self._state = init_slot_state(
+            max_batch, seed=seed + 1,
+            max_blocks=self.max_blocks_per_slot if cache_layout == "paged" else 0)
+        self._step = maybe_donate(
+            make_decode_sample_step(cfg, max_len, k_max=self.top_k_max), (1, 2))
+        # admission prefill: the n-row cache template is built *inside* the
+        # jitted function (from the traced batch shape), so its zeros are
+        # materialized on demand by XLA instead of living as per-batch-size
+        # device-resident templates on the host
         self._prefill = jax.jit(
-            lambda p, batch, cache: model_lib.prefill(cfg, p, batch, cache))
+            lambda p, batch: model_lib.prefill(
+                cfg, p, batch, self._admit_template(batch)))
+        self._prefill_paged = jax.jit(
+            lambda p, batch, live_cache, tables: model_lib.prefill(
+                cfg, p, batch,
+                self._graft_pools(self._admit_template(batch), live_cache),
+                block_tables=tables))
 
         # host-side token ring buffer: (max_batch, _RING) plus fill counts
         self._ring = np.zeros((max_batch, _RING), np.int32)
@@ -191,31 +253,88 @@ class ServingEngine:
         b = self.prompt_bucket
         return min(self.max_len - 1, ((n + b - 1) // b) * b)
 
+    def _blocks_for(self, plen: int, max_new: int) -> int:
+        """Pool blocks reserved at admission: prompt + decode budget, so the
+        fused step's append never has to allocate."""
+        tokens = min(plen + max_new, self.max_len)
+        return min(cache_lib.blocks_per_slot(tokens, self.block_size),
+                   self.max_blocks_per_slot)
+
+    @property
+    def blocks_in_use(self) -> int:
+        if self.layout != "paged":
+            return 0
+        return (self.num_blocks - 1) - len(self._free_blocks)
+
     def _admit(self) -> None:
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            plen = self._bucketed(len(req.prompt))
+        while self.queue:
+            free = [s for s in range(self.max_batch) if self.slots[s] is None]
+            if not free:
+                return
+            # the head of the queue defines the prompt bucket; batch every
+            # queued request sharing it, in FCFS order, up to the free slots
+            # and (paged) the free-stack budget.  A head that doesn't fit in
+            # the pool blocks admission entirely — strict FCFS backpressure.
+            plen = self._bucketed(len(self.queue[0].prompt))
+            picked: List[Request] = []
+            blocks_reserved = 0
+            for req in self.queue:
+                if len(picked) == len(free):
+                    break
+                if self._bucketed(len(req.prompt)) != plen:
+                    continue
+                if self.layout == "paged":
+                    nb = self._blocks_for(plen, req.params.max_new_tokens)
+                    if blocks_reserved + nb > len(self._free_blocks):
+                        break
+                    blocks_reserved += nb
+                picked.append(req)
+            if not picked:
+                return  # pool backpressure: wait for finishes to free blocks
+            picked_ids = {id(r) for r in picked}
+            self.queue = deque(
+                r for r in self.queue if id(r) not in picked_ids)
+            slots_for = free[:len(picked)]
+            self._admit_batch(picked, slots_for, plen)
+
+    def _admit_batch(self, reqs: List[Request], slots_for: List[int],
+                     plen: int) -> None:
+        """One batched prefill for ``reqs`` (all bucketed to ``plen``)."""
+        n = len(reqs)
+        toks = np.zeros((n, plen), np.int32)
+        for r, req in enumerate(reqs):
             use = req.prompt
             if len(use) > plen:  # keep the newest context, flag the loss
                 use = use[-plen:]
                 req.truncated = True
-            toks = np.zeros((1, plen), np.int32)
-            toks[0, -len(use):] = use
-            batch = {"tokens": jnp.asarray(toks)}
-            if self.cfg.is_encdec:
-                batch["enc_embeds"] = jnp.zeros(
-                    (1, max(plen // 2, 1), self.cfg.d_model), jnp.dtype(self.cfg.dtype))
-            if self.cfg.num_vision_tokens:
-                batch["vision_embeds"] = jnp.zeros(
-                    (1, self.cfg.num_vision_tokens, self.cfg.d_model),
-                    jnp.dtype(self.cfg.dtype))
-            logits, slot_cache = self._prefill(
-                self.params, batch, self._slot_cache_tmpl)
-            self.cache = self._merge_slot_cache(self.cache, slot_cache, slot)
+            toks[r, -len(use):] = use
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.is_encdec:
+            batch["enc_embeds"] = jnp.zeros(
+                (n, max(plen // 2, 1), self.cfg.d_model), self._dtype)
+        if self.cfg.num_vision_tokens:
+            batch["vision_embeds"] = jnp.zeros(
+                (n, self.cfg.num_vision_tokens, self.cfg.d_model), self._dtype)
+
+        if self.layout == "paged":
+            tables_np = np.zeros((n, self.max_blocks_per_slot), np.int32)
+            for r, (req, slot) in enumerate(zip(reqs, slots_for)):
+                nb = self._blocks_for(plen, req.params.max_new_tokens)
+                blocks = [self._free_blocks.pop() for _ in range(nb)]
+                tables_np[r, :nb] = blocks
+                self._slot_blocks[slot] = blocks
+            self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                          self.blocks_in_use)
+            tables = jnp.asarray(tables_np)
+            logits, filled = self._prefill_paged(
+                self.params, batch, self.cache, tables)
+        else:
+            logits, filled = self._prefill(self.params, batch)
+        self.cache = self._merge_admitted(self.cache, filled, slots_for)
+
+        for r, (req, slot) in enumerate(zip(reqs, slots_for)):
             self.key, k = jax.random.split(self.key)
-            first = int(sample(logits, req.params, k)[0])
+            first = int(sample(logits[r:r + 1], req.params, k)[0])
             req.first_token_time = time.perf_counter()
             req.output_tokens.append(first)
             self.slots[slot] = req
@@ -229,6 +348,10 @@ class ServingEngine:
                 slot, token=first, position=plen,
                 remaining=req.params.max_new_tokens - 1,
                 params=req.params, active=not done)
+            if self.layout == "paged":
+                self._state["block_tables"] = (
+                    self._state["block_tables"].at[slot].set(
+                        jnp.asarray(tables_np[r])))
             if done:
                 self._finish(slot)
 
@@ -245,31 +368,49 @@ class ServingEngine:
         s["eos"] = s["eos"].at[slot].set(params.eos_token)
         s["active"] = s["active"].at[slot].set(active)
 
+    def _admit_template(self, batch: Dict) -> Dict:
+        """Fresh prefill cache for an admitted batch (traced under jit)."""
+        n = batch["tokens"].shape[0]
+        return model_lib.init_cache(
+            self.cfg, n, self.max_len, self._dtype, layout=self.layout,
+            block_size=self.block_size,
+            # dummy 1-block pools; the live pools are grafted in per admit
+            num_blocks=1 if self.layout == "paged" else 0)
+
     @staticmethod
-    def _merge_slot_cache(full_cache, slot_cache, slot: int):
-        """Write a freshly prefilled single-slot cache into decode slot ``slot``.
+    def _graft_pools(tmpl: Dict, live_cache: Dict) -> Dict:
+        """Swap the template's dummy pools for the live shared pools."""
 
-        Cache leaves under ``groups`` carry a leading scan-group axis, so the
-        batch dim is axis 1 there and axis 0 under ``rest``.
+        def pick(path, t, live):
+            return live if path[-1].key in ("kp", "vp") else t
+
+        return jax.tree_util.tree_map_with_path(pick, tmpl, live_cache)
+
+    def _merge_admitted(self, full_cache, part_cache, slots_for: List[int]):
+        """Write a freshly prefilled ``len(slots_for)``-row cache into the
+        decode cache: row ``r`` lands in slot ``slots_for[r]``.
+
+        Pool leaves (``kp``/``vp``) already *are* the updated shared pools
+        (prefill scattered into them through the block tables) and pass
+        through; per-slot leaves land in one scatter per leaf (not one
+        copy per admitted row).  Leaves under ``groups`` carry a leading
+        scan-group axis, so the batch dim is axis 1 there and axis 0
+        under ``rest``.
         """
+        slots = jnp.asarray(slots_for, jnp.int32)
 
-        def upd(axis):
-            def fn(full, one):
-                if full.ndim <= axis:
-                    return full  # scalars / shared bookkeeping (e.g. `ring`)
-                return jax.lax.dynamic_update_slice_in_dim(
-                    full, one.astype(full.dtype), slot, axis=axis)
+        def merge(path, full, part):
+            if path[-1].key in ("kp", "vp"):
+                return part
+            axis = 1 if path[0].key == "groups" else 0
+            if full.ndim <= axis:
+                return full  # scalars / shared bookkeeping (e.g. `ring`)
+            part = part.astype(full.dtype)
+            if axis == 0:
+                return full.at[slots].set(part)
+            return full.at[:, slots].set(part)
 
-            return fn
-
-        merged = {}
-        if "groups" in full_cache:
-            merged["groups"] = jax.tree.map(
-                upd(1), full_cache["groups"], slot_cache["groups"])
-        if "rest" in full_cache:
-            merged["rest"] = jax.tree.map(
-                upd(0), full_cache["rest"], slot_cache["rest"])
-        return merged
+        return jax.tree_util.tree_map_with_path(merge, full_cache, part_cache)
 
     def _decode_once(self) -> None:
         if not any(s is not None for s in self.slots):
@@ -309,7 +450,43 @@ class ServingEngine:
         # state["active"] already cleared on device by the fused step for
         # decode finishes; clear explicitly for admission-time finishes
         self._state["active"] = self._state["active"].at[slot].set(False)
+        if self.layout == "paged" and self._slot_blocks[slot]:
+            # push the slot's blocks back on the free stack and point its
+            # table row at the garbage block so idle writes land in trash
+            self._free_blocks.extend(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self._state["block_tables"] = (
+                self._state["block_tables"].at[slot].set(
+                    cache_lib.GARBAGE_BLOCK))
         self._flush_energy()
+
+    # -- memory accounting -------------------------------------------------------
+    def kv_bytes_in_use(self, peak: bool = False) -> int:
+        """Full-context attention KV bytes the engine actually holds.
+
+        Paged: blocks in use (or the high-water mark with ``peak=True``)
+        times per-block bytes across the paged layers.  Contiguous: the
+        worst-case ``(max_batch, max_len)`` stripes — allocated up front
+        regardless of load, which is exactly what paging removes.
+        """
+        if self.layout == "paged":
+            blocks = self.peak_blocks_in_use if peak else self.blocks_in_use
+            return self._n_attn_layers * blocks * self.block_size * self._kv_tok_bytes
+        return self.kv_bytes_worst_case
+
+    @property
+    def kv_bytes_worst_case(self) -> int:
+        """Contiguous-layout footprint: every slot at ``max_len``."""
+        return self._n_attn_layers * self.max_batch * self.max_len * self._kv_tok_bytes
+
+    @property
+    def _n_attn_layers(self) -> int:
+        return sum(1 for kind in self.cfg.blocks() if kind == "attn")
+
+    @property
+    def _kv_tok_bytes(self) -> int:
+        cfg = self.cfg
+        return 2 * cfg.num_kv_heads * cfg.resolved_head_dim * self._dtype.itemsize
 
     # -- energy attribution ------------------------------------------------------
     def _count_token(self, req: Request) -> None:
@@ -364,6 +541,8 @@ class ServingEngine:
         for name, xs in (("ttft", ttfts), ("tpot", tpots), ("ttlt", ttlts)):
             for q in (50, 95, 99):
                 summary[f"{name}_p{q}_ms"] = _percentile(xs, q) * 1e3
+        summary["kv_bytes_peak"] = self.kv_bytes_in_use(peak=True)
+        summary["kv_bytes_worst_case"] = self.kv_bytes_worst_case
         if self.monitor is not None:
             total_j = sum(r.joules for r in self.finished)
             summary["joules_total"] = total_j

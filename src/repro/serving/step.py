@@ -43,20 +43,23 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     return make_decode_step(cfg)
 
 
-def init_slot_state(max_batch: int, seed: int = 0) -> Dict[str, jax.Array]:
+def init_slot_state(max_batch: int, seed: int = 0,
+                    max_blocks: int = 0) -> Dict[str, jax.Array]:
     """Device-resident per-slot scheduler state for ``decode_sample_step``.
 
-    tokens      (B, 1) int32  — next input token per slot
-    positions   (B,)   int32  — next cache write position per slot
-    active      (B,)   bool   — slot is serving a live request
-    remaining   (B,)   int32  — new-token budget left (max_new minus emitted)
-    temperature (B,)   f32    — per-slot sampling temperature (<=0 greedy)
-    top_k       (B,)   int32  — per-slot top-k (0 = no filter)
-    eos         (B,)   int32  — per-slot EOS id (-1 = never)
-    key                PRNG   — split on device every step
+    tokens       (B, 1) int32  — next input token per slot
+    positions    (B,)   int32  — next cache write position per slot
+    active       (B,)   bool   — slot is serving a live request
+    remaining    (B,)   int32  — new-token budget left (max_new minus emitted)
+    temperature  (B,)   f32    — per-slot sampling temperature (<=0 greedy)
+    top_k        (B,)   int32  — per-slot top-k (0 = no filter)
+    eos          (B,)   int32  — per-slot EOS id (-1 = never)
+    key                 PRNG   — split on device every step
+    block_tables (B, max_blocks) int32 — paged layout only (max_blocks > 0):
+                 pool block per (slot, logical block); 0 = garbage block
     """
     B = max_batch
-    return {
+    state = {
         "tokens": jnp.zeros((B, 1), jnp.int32),
         "positions": jnp.zeros((B,), jnp.int32),
         "active": jnp.zeros((B,), jnp.bool_),
@@ -66,6 +69,22 @@ def init_slot_state(max_batch: int, seed: int = 0) -> Dict[str, jax.Array]:
         "eos": jnp.full((B,), -1, jnp.int32),
         "key": jax.random.PRNGKey(seed),
     }
+    if max_blocks > 0:
+        state["block_tables"] = jnp.zeros((B, max_blocks), jnp.int32)
+    return state
+
+
+def maybe_donate(fn: Callable, argnums: Tuple[int, ...]) -> Callable:
+    """``jax.jit`` with buffer donation where the backend supports it.
+
+    Donating the fused step's cache/state buffers lets XLA update the KV
+    cache in place instead of allocating a fresh copy every step.  CPU has
+    no donation support (jax would warn and ignore it), so fall back to a
+    plain jit there.
+    """
+    if jax.default_backend() == "cpu":
+        return jax.jit(fn)
+    return jax.jit(fn, donate_argnums=argnums)
 
 
 def make_decode_sample_step(cfg: ModelConfig, max_len: int,
@@ -80,13 +99,17 @@ def make_decode_sample_step(cfg: ModelConfig, max_len: int,
       out[2] — 1 where the slot was active and therefore emitted out[0]
 
     Idle slots keep re-feeding their last token at a frozen position, so the
-    compiled executable never changes shape; their writes land in their own
-    cache slot only and are overwritten on the next admission.
+    compiled executable never changes shape.  Contiguous layout: their
+    writes land in their own cache slot and are overwritten on the next
+    admission.  Paged layout (``state["block_tables"]`` present): their
+    table rows point at the reserved garbage block, so the writes land in
+    trash and the shared pool stays intact.
     """
 
     def step(params, state: Dict[str, jax.Array], cache) -> Tuple[Dict, Dict, jax.Array]:
         logits, new_cache = model_lib.decode_step(
-            cfg, params, state["tokens"], state["positions"], cache)
+            cfg, params, state["tokens"], state["positions"], cache,
+            block_tables=state.get("block_tables"))
         key, sub = jax.random.split(state["key"])
         tok = sample_slots(logits, state["temperature"], state["top_k"], sub,
                            k_max=k_max)
@@ -99,16 +122,14 @@ def make_decode_sample_step(cfg: ModelConfig, max_len: int,
         hit_eos = (state["eos"] >= 0) & (tok == state["eos"])
         done = active & (hit_eos | (remaining <= 0) | (positions >= max_len - 1))
 
-        new_state = {
-            "tokens": tok[:, None],
-            "positions": positions,
-            "active": active & ~done,
-            "remaining": remaining,
-            "temperature": state["temperature"],
-            "top_k": state["top_k"],
-            "eos": state["eos"],
-            "key": key,
-        }
+        new_state = dict(state)  # block_tables etc. pass through untouched
+        new_state.update(
+            tokens=tok[:, None],
+            positions=positions,
+            active=active & ~done,
+            remaining=remaining,
+            key=key,
+        )
         out = jnp.stack([tok, done.astype(jnp.int32), act_i])
         return new_state, new_cache, out
 
