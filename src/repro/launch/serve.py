@@ -83,6 +83,15 @@ def main(argv=None) -> int:
                     help="paged pool size in blocks (0 = worst case); "
                          "smaller pools trade admission backpressure for "
                          "device memory")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: split prompt prefills into "
+                         "chunks of this many tokens, interleaved with "
+                         "decode steps (0 = whole-prompt admission); bounds "
+                         "how long in-flight decodes stall on a new prompt")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="prompt tokens of chunk work per engine step "
+                         "(0 = one chunk; clamped to >= --prefill-chunk); "
+                         "only meaningful with --prefill-chunk")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -116,7 +125,9 @@ def main(argv=None) -> int:
                                max_len=args.max_len, seed=args.seed,
                                cache_layout=args.cache_layout,
                                kv_block_size=args.kv_block_size,
-                               kv_num_blocks=args.kv_num_blocks)
+                               kv_num_blocks=args.kv_num_blocks,
+                               prefill_chunk=args.prefill_chunk,
+                               prefill_budget=args.prefill_budget)
         driver = OpenLoopDriver(engine, arrivals)
         if reader is not None:
             monitor = PowerMonitor(reader)

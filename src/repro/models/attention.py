@@ -152,6 +152,48 @@ def apply_attention_prefill(
     return _out_proj(p, o), kv_cache
 
 
+def apply_attention_prefill_chunk(
+    p: Dict,
+    x: jax.Array,            # (B, C, d) one prompt chunk
+    cfg: ModelConfig,
+    positions: jax.Array,    # (B, C) absolute positions start..start+C-1
+    kv_cache: Dict,
+    *,
+    window: int = 0,
+    block_tables: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Chunked prefill: the chunk attends to every cached chunk 0..N-1 plus
+    itself (causally), then its K/V is appended for chunks N+1.. and decode.
+
+    Contiguous/ring caches attend over (cache-before-append ++ chunk) so a
+    chunk longer than a sliding window still sees its own early keys (the
+    ring would evict them during the append).  Paged caches append first
+    and attend over the gathered pool, where index == absolute position.
+    """
+    q = _project_q(p, x, cfg)
+    k_new, v_new = _project_kv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    if "kp" in kv_cache:
+        kv_cache = cache_lib.append_paged_cache(
+            kv_cache, k_new, v_new, positions, block_tables)
+        k_all, v_all, k_pos = cache_lib.gather_paged_kv(kv_cache, block_tables)
+        o = dispatch.flash_attention(
+            q, k_all, v_all, q_positions=positions, k_positions=k_pos,
+            causal=True, window=window, softcap=cfg.logit_softcap,
+        )
+        return _out_proj(p, o), kv_cache
+    k_all = jnp.concatenate([kv_cache["k"].astype(k_new.dtype), k_new], axis=1)
+    v_all = jnp.concatenate([kv_cache["v"].astype(v_new.dtype), v_new], axis=1)
+    k_pos = jnp.concatenate([kv_cache["pos"], positions], axis=1)
+    o = dispatch.flash_attention(
+        q, k_all, v_all, q_positions=positions, k_positions=k_pos,
+        causal=True, window=window, softcap=cfg.logit_softcap,
+    )
+    kv_cache = cache_lib.append_attn_cache(kv_cache, k_new, v_new, positions)
+    return _out_proj(p, o), kv_cache
+
+
 def apply_attention_decode(
     p: Dict,
     x: jax.Array,            # (B, 1, d)
@@ -161,6 +203,7 @@ def apply_attention_decode(
     *,
     window: int = 0,
     block_tables: Optional[jax.Array] = None,
+    update_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     B = x.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (B,))
@@ -171,14 +214,15 @@ def apply_attention_decode(
     k_new = apply_rope(k_new, pos_b, cfg.rope_theta)
     if "kp" in kv_cache:  # paged: append via block table, attend on the pool
         kv_cache = cache_lib.update_paged_cache(
-            kv_cache, k_new, v_new, positions, block_tables)
+            kv_cache, k_new, v_new, positions, block_tables, update_mask)
         o = dispatch.paged_decode_attention(
             q, kv_cache["kp"], kv_cache["vp"],
             block_tables=block_tables, q_positions=pos_b,
             window=window, softcap=cfg.logit_softcap,
         )
         return _out_proj(p, o), kv_cache
-    kv_cache = cache_lib.update_attn_cache(kv_cache, k_new, v_new, positions)
+    kv_cache = cache_lib.update_attn_cache(kv_cache, k_new, v_new, positions,
+                                           update_mask)
     o = dispatch.decode_attention(
         q, kv_cache["k"], kv_cache["v"],
         q_positions=pos_b, k_positions=kv_cache["pos"],

@@ -87,16 +87,53 @@ def fill_attn_cache(cache: Dict, k: jax.Array, v: jax.Array, positions: jax.Arra
 
 
 def update_attn_cache(cache: Dict, k_new: jax.Array, v_new: jax.Array,
-                      positions: jax.Array) -> Dict:
-    """Write one decoded token's K/V (B, 1, H, D) at per-row ``positions`` (B,)."""
+                      positions: jax.Array,
+                      update_mask: jax.Array = None) -> Dict:
+    """Write one decoded token's K/V (B, 1, H, D) at per-row ``positions`` (B,).
+
+    ``update_mask`` (B,) bool, when given, turns masked-off rows into no-op
+    writes (the current cache content is written back).  The fused serving
+    step uses it so idle and mid-prefill slots never clobber ring entries
+    that a chunked prefill is concurrently filling.
+    """
     B, L = cache["pos"].shape
     positions = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (B,))
     slot = positions % L
     rows = jnp.arange(B)
-    k = cache["k"].at[rows, slot].set(k_new[:, 0])
-    v = cache["v"].at[rows, slot].set(v_new[:, 0])
-    pos = cache["pos"].at[rows, slot].set(positions)
+    k_w, v_w, p_w = k_new[:, 0], v_new[:, 0], positions
+    if update_mask is not None:
+        m = update_mask.reshape(B, 1, 1)
+        k_w = jnp.where(m, k_w, cache["k"][rows, slot])
+        v_w = jnp.where(m, v_w, cache["v"][rows, slot])
+        p_w = jnp.where(update_mask, p_w, cache["pos"][rows, slot])
+    k = cache["k"].at[rows, slot].set(k_w)
+    v = cache["v"].at[rows, slot].set(v_w)
+    pos = cache["pos"].at[rows, slot].set(p_w)
     return {"k": k, "v": v, "pos": pos, "ring": cache["ring"]}
+
+
+def append_attn_cache(cache: Dict, k: jax.Array, v: jax.Array,
+                      positions: jax.Array) -> Dict:
+    """Write a prompt chunk's K/V (B, C, H, D) at absolute ``positions``
+    (B, C) into a contiguous or ring cache, preserving existing entries.
+
+    Unlike ``fill_attn_cache`` (whole-prompt, fresh cache) this scatters
+    only the chunk's own C columns, so chunk N lands next to chunks
+    0..N-1.  A chunk longer than a ring keeps its tail (earlier chunk
+    positions would be evicted immediately anyway)."""
+    B, C = k.shape[:2]
+    L = cache["k"].shape[1]
+    if C > L:  # ring shorter than the chunk: only the tail survives
+        k, v, positions = k[:, C - L:], v[:, C - L:], positions[:, C - L:]
+        C = L
+    rows = jnp.arange(B)[:, None]
+    slots = positions % L
+    return {
+        "k": cache["k"].at[rows, slots].set(k.astype(cache["k"].dtype)),
+        "v": cache["v"].at[rows, slots].set(v.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[rows, slots].set(positions),
+        "ring": cache["ring"],
+    }
 
 
 # -- paged (block-pool) attention cache --------------------------------------
@@ -137,23 +174,68 @@ def fill_paged_cache(
 
 def update_paged_cache(
     cache: Dict, k_new: jax.Array, v_new: jax.Array, positions: jax.Array,
-    block_tables: jax.Array,
+    block_tables: jax.Array, update_mask: jax.Array = None,
 ) -> Dict:
     """Write one decoded token's K/V (B, 1, H, D) at per-row ``positions``.
 
     Active slots always have the covering block allocated (admission
     reserves blocks for prompt + budget); idle slots' tables point at the
     garbage block, so their static-shape writes land in trash.
+    ``update_mask`` (B,) bool additionally routes masked-off rows to the
+    garbage block regardless of their table row — the engine arms a slot's
+    real table row when it becomes decode-eligible, and only the chunked
+    prefill may write its blocks before that.
     """
     B = block_tables.shape[0]
     positions = jnp.broadcast_to(jnp.asarray(positions, jnp.int32), (B,))
     bs = cache["kp"].shape[1]
     rows = jnp.arange(B)
     blk = block_tables[rows, positions // bs]
+    if update_mask is not None:
+        blk = jnp.where(update_mask, blk, GARBAGE_BLOCK)
     off = positions % bs
     kp = cache["kp"].at[blk, off].set(k_new[:, 0].astype(cache["kp"].dtype))
     vp = cache["vp"].at[blk, off].set(v_new[:, 0].astype(cache["vp"].dtype))
     return {"kp": kp, "vp": vp}
+
+
+def append_paged_cache(
+    cache: Dict, k: jax.Array, v: jax.Array, positions: jax.Array,
+    block_tables: jax.Array,
+) -> Dict:
+    """Scatter a prompt chunk's K/V (B, C, H, D) at absolute ``positions``
+    (B, C) into pool blocks through the block tables.
+
+    Unlike ``fill_paged_cache`` (whole prompt, block-aligned from position
+    0) the chunk may start and end anywhere inside a block, so each token
+    is routed individually: position ``p`` lands at
+    ``pool[table[b, p // bs], p % bs]``."""
+    bs = cache["kp"].shape[1]
+    blk = jnp.take_along_axis(block_tables, positions // bs, axis=1)  # (B, C)
+    off = positions % bs
+    kp = cache["kp"].at[blk, off].set(k.astype(cache["kp"].dtype))
+    vp = cache["vp"].at[blk, off].set(v.astype(cache["vp"].dtype))
+    return {"kp": kp, "vp": vp}
+
+
+def gather_paged_kv(cache: Dict, block_tables: jax.Array):
+    """Materialize each row's pool blocks as dense K/V plus key positions.
+
+    Returns ``(k, v, k_positions)`` of shapes (B, M*bs, H, D) x2 and
+    (B, M*bs) where M is the block-table width.  Gathered index ``j`` *is*
+    absolute position ``j``; table entries beyond the row's allocation
+    point at the garbage block, whose logical positions exceed every
+    prompt position and are hidden by causal masking.  Used by the chunked
+    prefill (chunk N attends to cached chunks 0..N-1 plus itself);
+    decode-side reads go through the scalar-prefetch Pallas kernel
+    instead, which never materializes this gather."""
+    kp, vp = cache["kp"], cache["vp"]
+    B, M = block_tables.shape
+    bs = kp.shape[1]
+    k = kp[block_tables].reshape(B, M * bs, *kp.shape[2:])
+    v = vp[block_tables].reshape(B, M * bs, *vp.shape[2:])
+    pos = jnp.broadcast_to(jnp.arange(M * bs, dtype=jnp.int32)[None], (B, M * bs))
+    return k, v, pos
 
 
 # -- recurrent states --------------------------------------------------------

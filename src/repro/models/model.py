@@ -161,14 +161,23 @@ def _apply_block_seq(
     causal: bool,
     fill_cache: bool,
     block_tables: Optional[jax.Array] = None,
+    chunked: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict]]:
-    """Full-sequence block (train / prefill / encoder)."""
+    """Full-sequence block (train / prefill / encoder).
+
+    ``chunked=True`` switches attention blocks to the chunked-prefill path
+    (attend over the cache + the chunk instead of a self-contained prompt);
+    recurrent and conv blocks already resume from the state carried in
+    ``cache_entry``, so they need no chunk-specific handling.
+    """
     new_entry: Optional[Dict] = None
     if kind in ("attn", "local_attn"):
         window = cfg.sliding_window if kind == "local_attn" else 0
         h = apply_norm(p["norm1"], x, cfg.norm_eps)
         if fill_cache:
-            a, self_cache = attn_lib.apply_attention_prefill(
+            attn_fn = (attn_lib.apply_attention_prefill_chunk if chunked
+                       else attn_lib.apply_attention_prefill)
+            a, self_cache = attn_fn(
                 p["attn"], h, cfg, positions, cache_entry["self"],
                 window=window, block_tables=block_tables
             )
@@ -217,6 +226,25 @@ def _apply_block_seq(
     raise ValueError(kind)
 
 
+def _gate_entry(new_entry: Dict, old_entry: Dict,
+                update_mask: Optional[jax.Array]) -> Dict:
+    """Freeze masked-off rows of a per-slot state entry at their old value.
+
+    Used by the decode path for recurrent/conv states: idle and mid-prefill
+    slots run the (garbage) step math for shape stability, but their state
+    must not advance — a chunked prefill may be building it concurrently.
+    Leaves are (B, ...); scalar bookkeeping leaves pass through.
+    """
+    if update_mask is None:
+        return new_entry
+    def gate(new, old):
+        if new.ndim == 0:
+            return new
+        m = update_mask.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+    return jax.tree.map(gate, new_entry, old_entry)
+
+
 def _apply_block_decode(
     p: Dict,
     cfg: ModelConfig,
@@ -225,13 +253,14 @@ def _apply_block_decode(
     position: jax.Array,
     cache_entry: Dict,
     block_tables: Optional[jax.Array] = None,
+    update_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     if kind in ("attn", "local_attn"):
         window = cfg.sliding_window if kind == "local_attn" else 0
         h = apply_norm(p["norm1"], x, cfg.norm_eps)
         a, self_cache = attn_lib.apply_attention_decode(
             p["attn"], h, cfg, position, cache_entry["self"], window=window,
-            block_tables=block_tables
+            block_tables=block_tables, update_mask=update_mask
         )
         new_entry = dict(cache_entry)
         new_entry["self"] = self_cache
@@ -259,13 +288,13 @@ def _apply_block_decode(
         x = x + y
         h = apply_norm(p["norm2"], x, cfg.norm_eps)
         x = x + apply_mlp(p["mlp"], h, cfg.mlp_act)
-        return x, st
+        return x, _gate_entry(st, cache_entry, update_mask)
 
     if kind in ("mlstm", "slstm"):
         h = apply_norm(p["norm"], x, cfg.norm_eps)
         fn = rec_lib.apply_mlstm_step if kind == "mlstm" else rec_lib.apply_slstm_step
         y, st = fn(p["cell"], h, cfg, cache_entry)
-        return x + y, st
+        return x + y, _gate_entry(st, cache_entry, update_mask)
 
     raise ValueError(kind)
 
@@ -285,6 +314,7 @@ def _apply_stack_seq(
     causal: bool,
     remat: bool,
     block_tables: Optional[jax.Array] = None,
+    chunked: bool = False,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     pattern = cfg.block_pattern
     fill = cache is not None
@@ -297,6 +327,7 @@ def _apply_stack_seq(
             x, new_entry = _apply_block_seq(
                 group_params[str(i)], cfg, kind, x, positions, entry, memory,
                 causal=causal, fill_cache=fill, block_tables=block_tables,
+                chunked=chunked,
             )
             if fill:
                 new_cache[str(i)] = new_entry
@@ -335,6 +366,7 @@ def _apply_stack_seq(
             x, new_entry = _apply_block_seq(
                 stack["rest"][str(i)], cfg, kind, x, positions, entry, memory,
                 causal=causal, fill_cache=fill, block_tables=block_tables,
+                chunked=chunked,
             )
             if fill:
                 new_rest[str(i)] = new_entry
@@ -351,6 +383,7 @@ def _apply_stack_decode(
     position: jax.Array,
     cache: Dict,
     block_tables: Optional[jax.Array] = None,
+    update_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     pattern = cfg.block_pattern
     n_groups, n_rest = cfg.layer_groups()
@@ -362,7 +395,7 @@ def _apply_stack_decode(
             for i, kind in enumerate(pattern):
                 x, nc[str(i)] = _apply_block_decode(
                     gp[str(i)], cfg, kind, x, position, gc[str(i)],
-                    block_tables
+                    block_tables, update_mask
                 )
             return x, nc
 
@@ -381,7 +414,7 @@ def _apply_stack_decode(
         for i, kind in enumerate(pattern[:n_rest]):
             x, nr[str(i)] = _apply_block_decode(
                 stack["rest"][str(i)], cfg, kind, x, position,
-                cache["rest"][str(i)], block_tables
+                cache["rest"][str(i)], block_tables, update_mask
             )
         new_cache["rest"] = nr
     x = apply_norm(stack["final_norm"], x, cfg.norm_eps)
@@ -522,16 +555,58 @@ def prefill(
     return logits, new_cache
 
 
+def prefill_chunk(
+    cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
+    start: jax.Array, *, block_tables: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict]:
+    """Process one prompt chunk (positions ``start..start+C-1``) against a
+    cache already holding chunks for positions ``0..start-1``.
+
+    Attention blocks attend over the cached earlier chunks plus the chunk
+    itself (causal); recurrent/conv blocks resume from their carried state.
+    ``start`` may be a traced scalar, so one compiled executable serves
+    every chunk offset of a given chunk width.  Returns the chunk's
+    last-position logits (only meaningful for the final chunk) and the
+    updated cache.  For a VLM config, pass ``vision_embeds`` only with the
+    ``start == 0`` chunk and offset later chunk starts by
+    ``num_vision_tokens`` — mirroring the prefix handling of ``prefill``.
+    """
+    x = _embed_inputs(cfg, params, batch)
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+    positions = jnp.broadcast_to(positions, x.shape[:2])
+    memory = None
+    if cfg.is_encdec:
+        enc_x = batch["enc_embeds"].astype(x.dtype)
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc_x.shape[1], dtype=jnp.int32)[None], enc_x.shape[:2]
+        )
+        memory, _ = _apply_stack_seq(
+            params["encoder"], _enc_cfg(cfg), enc_x, enc_pos, None, None,
+            causal=False, remat=False,
+        )
+    x, new_cache = _apply_stack_seq(
+        params["decoder"], cfg, x, positions, cache, memory,
+        causal=True, remat=False, block_tables=block_tables, chunked=True,
+    )
+    logits = unembed(params.get("lm_head", params["embed"]), x[:, -1:],
+                     cfg.logit_softcap)[:, 0]
+    return logits, new_cache
+
+
 def decode_step(
     cfg: ModelConfig, params: Dict, token: jax.Array, position: jax.Array,
     cache: Dict, block_tables: Optional[jax.Array] = None,
+    update_mask: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """One decode step.  token (B, 1) int32; position scalar or (B,) int32.
-    ``block_tables`` (B, max_blocks) int32 is required for paged caches."""
+    ``block_tables`` (B, max_blocks) int32 is required for paged caches.
+    ``update_mask`` (B,) bool freezes cache/state writes of masked-off rows
+    (idle or mid-chunked-prefill slots in the serving engine)."""
     position = jnp.broadcast_to(
         jnp.asarray(position, jnp.int32), (token.shape[0],))
     x = embed_tokens(params["embed"], token, cfg.emb_scale, cfg.d_model)
     x, new_cache = _apply_stack_decode(params["decoder"], cfg, x, position,
-                                       cache, block_tables)
+                                       cache, block_tables, update_mask)
     logits = unembed(params.get("lm_head", params["embed"]), x, cfg.logit_softcap)[:, 0]
     return logits, new_cache

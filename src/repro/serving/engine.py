@@ -41,9 +41,47 @@ Design (vLLM-lite, static-shape TPU-friendly):
   state with O(1)-sized ``.at[slot].set`` writes — lazy device ops, not
   syncs.  Prompts longer than ``max_len - 1`` keep their *last* ``plen``
   tokens and are flagged ``truncated``.
-* **Open-loop friendly.**  ``step()`` performs one admit+decode round so a
-  traffic driver (``serving.workload``) can interleave Poisson arrivals
-  with engine work; ``run()`` is the closed-loop drain used by tests.
+* **Chunked prefill** (``prefill_chunk=N``, Sarathi-style).  Unchunked
+  admission stalls every in-flight decode slot while a new prompt prefills
+  in one shot — exactly the TTFT/TPOT interference the paper's latency
+  metrics penalize.  With chunking enabled a slot has **three** states
+  instead of two:
+
+    - *free*        — ``slots[s] is None``;
+    - *prefilling*  — ``slots[s]`` set and ``_cursors[s]`` holds a chunk
+      cursor: the bucketed (padded) prompt plus the next position to
+      prefill.  The slot owns its cache row / pool blocks (reserved at
+      admission, exactly like unchunked) but is **not** decode-eligible;
+    - *decoding*    — cursor retired: the final chunk landed, the first
+      token was sampled from its logits, and the device state row went
+      active.
+
+  Each engine step spends a **prefill token budget** (``prefill_budget``,
+  default = chunk size) advancing cursors FCFS — a cursor's next chunk is
+  processed only if it fits the remaining budget, so one step never does
+  more than ~one chunk of prompt work — and *then* runs the fused decode
+  step for the decoding slots.  Decode therefore never waits on more than
+  one chunk of another request's prompt: admission cost is spread across
+  steps instead of stalling the batch.  Chunk N attends to cached chunks
+  0..N-1 plus itself (``models.model.prefill_chunk``); the chunk's K/V is
+  scattered mid-prompt into whichever layout is live (contiguous rows,
+  ring buffers, or pool blocks through the block table).  The slot's cache
+  row is reset to init values at admission (unchunked admission implicitly
+  resets by overwriting the whole row), and the fused step masks all cache
+  writes of non-active slots so interleaved decode steps cannot corrupt a
+  half-built prefill.
+* **Scheduling-invariant sampling.**  Every request's tokens are drawn
+  from a per-request PRNG chain: token 0 from ``fold_in(fold_in(base,
+  uid), 0)`` at admission, later tokens from a per-slot on-device key
+  chain seeded with ``fold_in(fold_in(base, uid), 1)`` and split once per
+  emitted token.  Streams are therefore a pure function of (seed, uid,
+  logits) — chunked, unchunked, contiguous, and paged engines all emit
+  byte-identical streams for the same seed (``tests/test_chunked_prefill``
+  holds them to that).
+* **Open-loop friendly.**  ``step()`` performs one admit + chunk + decode
+  round so a traffic driver (``serving.workload``) can interleave Poisson
+  arrivals with engine work; ``run()`` is the closed-loop drain used by
+  tests.
 * **Per-request energy attribution.**  With a ``core.energy.PowerMonitor``
   attached, the engine tiles wall-clock into windows (closed whenever a
   request finishes and at drain); each window's joules — step-function
@@ -51,7 +89,8 @@ Design (vLLM-lite, static-shape TPU-friendly):
   are split over the requests proportionally to the tokens they emitted in
   that window and accumulated on ``Request.joules``.
 
-Follow-on work (chunked prefill) is tracked in ROADMAP.md §Serving.
+Follow-on work (block-level prefix caching) is tracked in ROADMAP.md
+§Serving.
 """
 
 from __future__ import annotations
@@ -106,10 +145,22 @@ class Request:
 
 
 def _percentile(xs: List[float], q: float) -> float:
-    """Nearest-rank percentile (q in [0, 100]) of a non-empty list."""
+    """Nearest-rank percentile (q in [0, 100]); 0.0 for an empty list."""
+    if not xs:
+        return 0.0
     ys = sorted(xs)
     k = max(int(np.ceil(len(ys) * q / 100.0)), 1) - 1
     return ys[min(k, len(ys) - 1)]
+
+
+@dataclasses.dataclass
+class _PrefillCursor:
+    """Per-slot chunked-prefill progress (the third scheduler state)."""
+    req: Request
+    tokens: np.ndarray            # (plen,) bucketed, left-padded prompt
+    plen: int                     # bucketed prompt length
+    next: int = 0                 # next prompt position to prefill
+    tables_np: Optional[np.ndarray] = None  # (max_blocks,) paged table row
 
 
 class ServingEngine:
@@ -127,6 +178,8 @@ class ServingEngine:
         cache_layout: str = "contiguous",
         kv_block_size: int = 16,
         kv_num_blocks: int = 0,
+        prefill_chunk: int = 0,
+        prefill_budget: int = 0,
     ):
         assert cache_layout in ("contiguous", "paged"), cache_layout
         self.cfg = cfg
@@ -135,11 +188,19 @@ class ServingEngine:
         self.max_len = max_len
         self.prompt_bucket = prompt_bucket
         self.layout = cache_layout
+        # chunked prefill: 0 disables (whole-prompt admission); the budget
+        # is prompt tokens of chunk work per engine step (default: one
+        # chunk).  Clamped to >= one chunk — a smaller budget would never
+        # fit the head cursor's next chunk and stall its request forever.
+        self.chunk = max(int(prefill_chunk), 0)
+        self.chunk_budget = max(int(prefill_budget) or self.chunk, self.chunk)
         # static bound on per-request top-k inside the fused step (a full
         # per-slot vocab sort would dominate it); requests asking for more
         # are clamped — consistently, first token included
         self.top_k_max = min(top_k_max, cfg.vocab_size)
-        self.key = jax.random.PRNGKey(seed)  # host-side key for prefill sampling
+        # per-request sampling keys derive from this by uid (fold_in), so
+        # streams do not depend on admission scheduling
+        self._base_key = jax.random.PRNGKey(seed)
         dtype = jnp.dtype(cfg.dtype)
         self._dtype = dtype
 
@@ -165,6 +226,10 @@ class ServingEngine:
             cfg, max_batch, max_len, dtype, layout=cache_layout,
             block_size=kv_block_size, num_blocks=self.num_blocks)
         self.slots: List[Optional[Request]] = [None] * max_batch
+        # chunked-prefill cursors: _cursors[s] is set while slot s is in the
+        # *prefilling* state; _prefill_order is the FCFS service order
+        self._cursors: List[Optional[_PrefillCursor]] = [None] * max_batch
+        self._prefill_order: List[int] = []
         self.queue: deque = deque()
         self.finished: List[Request] = []
         self._uid = 0
@@ -188,6 +253,35 @@ class ServingEngine:
                 cfg, p, batch,
                 self._graft_pools(self._admit_template(batch), live_cache),
                 block_tables=tables))
+
+        # chunked prefill: one chunk of one slot against the live cache.
+        # ``start`` and ``slot`` ride as traced scalars, so the executable
+        # is compiled once per chunk *width* and replayed for every offset
+        # and slot.  The slot's row is sliced out, the chunk is applied
+        # (appending K/V mid-prompt), and the row is scattered back; pool
+        # leaves pass through whole — the append already wrote into them
+        # through the block table.
+        def _chunk_body(p, batch, start, slots, cache, tables):
+            part = self._slice_slots(cache, slots)
+            logits, part = model_lib.prefill_chunk(
+                cfg, p, batch, part, start, block_tables=tables)
+            return logits, self._merge_admitted(cache, part, slots)
+
+        self._chunk_contig = maybe_donate(
+            lambda p, batch, start, slots, cache: _chunk_body(
+                p, batch, start, slots, cache, None), (4,))
+        self._chunk_paged = maybe_donate(_chunk_body, (4,))
+        # admission-time reset of one slot's cache row to init values (the
+        # unchunked path resets implicitly by overwriting the whole row at
+        # prefill; a chunk only writes its own span, so stale positions /
+        # recurrent state from the previous occupant must be cleared first)
+        self._reset_rows = maybe_donate(
+            lambda cache, slots: self._merge_admitted(
+                cache,
+                self._graft_pools(
+                    self._admit_template({"tokens": jnp.zeros(
+                        (slots.shape[0], 1), jnp.int32)}), cache),
+                slots), (0,))
 
         # host-side token ring buffer: (max_batch, _RING) plus fill counts
         self._ring = np.zeros((max_batch, _RING), np.int32)
@@ -217,10 +311,11 @@ class ServingEngine:
         return bool(self.queue) or any(s is not None for s in self.slots)
 
     def step(self) -> bool:
-        """One admit + decode round; returns True if any work was done."""
+        """One admit + chunk + decode round; returns True if work was done."""
         if not self.busy:
             return False
         self._admit()
+        self._advance_chunks()
         self._decode_once()
         return True
 
@@ -295,7 +390,10 @@ class ServingEngine:
             self.queue = deque(
                 r for r in self.queue if id(r) not in picked_ids)
             slots_for = free[:len(picked)]
-            self._admit_batch(picked, slots_for, plen)
+            if self.chunk > 0:
+                self._admit_chunked(picked, slots_for, plen)
+            else:
+                self._admit_batch(picked, slots_for, plen)
 
     def _admit_batch(self, reqs: List[Request], slots_for: List[int],
                      plen: int) -> None:
@@ -333,31 +431,120 @@ class ServingEngine:
         self.cache = self._merge_admitted(self.cache, filled, slots_for)
 
         for r, (req, slot) in enumerate(zip(reqs, slots_for)):
-            self.key, k = jax.random.split(self.key)
-            first = int(sample(logits[r:r + 1], req.params, k)[0])
-            req.first_token_time = time.perf_counter()
-            req.output_tokens.append(first)
             self.slots[slot] = req
-            self._count_token(req)
+            self._start_decoding(
+                req, slot, plen, logits[r:r + 1],
+                tables_np[r] if self.layout == "paged" else None)
 
-            done = (req.params.max_new_tokens <= 1
-                    or (req.params.eos_token >= 0
-                        and first == req.params.eos_token)
-                    or plen >= self.max_len - 1)
-            self._write_slot_state(
-                slot, token=first, position=plen,
-                remaining=req.params.max_new_tokens - 1,
-                params=req.params, active=not done)
+    def _admit_chunked(self, reqs: List[Request], slots_for: List[int],
+                       plen: int) -> None:
+        """Admission with chunked prefill: reserve the slot (and pool
+        blocks) and set up a chunk cursor; no prompt work happens yet, so
+        admission never stalls in-flight decodes.  The slot's cache row is
+        reset to init values — chunk writes only cover the prompt span,
+        and stale positions / recurrent state from the previous occupant
+        would otherwise leak into the chunk's attention and state."""
+        for req, slot in zip(reqs, slots_for):
+            use = req.prompt
+            if len(use) > plen:  # keep the newest context, flag the loss
+                use = use[-plen:]
+                req.truncated = True
+            toks = np.zeros(plen, np.int32)
+            toks[-len(use):] = use
+            tables_np = None
             if self.layout == "paged":
-                self._state["block_tables"] = (
-                    self._state["block_tables"].at[slot].set(
-                        jnp.asarray(tables_np[r])))
-            if done:
-                self._finish(slot)
+                nb = self._blocks_for(plen, req.params.max_new_tokens)
+                blocks = [self._free_blocks.pop() for _ in range(nb)]
+                tables_np = np.zeros(self.max_blocks_per_slot, np.int32)
+                tables_np[:nb] = blocks
+                self._slot_blocks[slot] = blocks
+            self.slots[slot] = req
+            self._cursors[slot] = _PrefillCursor(
+                req=req, tokens=toks, plen=plen, tables_np=tables_np)
+            self._prefill_order.append(slot)
+        if self.layout == "paged":
+            self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                          self.blocks_in_use)
+        self.cache = self._reset_rows(
+            self.cache, jnp.asarray(slots_for, jnp.int32))
+
+    def _advance_chunks(self) -> None:
+        """Spend the per-step prefill budget on cursors, FCFS.  A cursor's
+        next chunk runs only if it fits the remaining budget, bounding the
+        prompt work any single engine step (and therefore any in-flight
+        decode token) waits on."""
+        budget = self.chunk_budget
+        while budget > 0 and self._prefill_order:
+            slot = self._prefill_order[0]
+            cur = self._cursors[slot]
+            c = min(self.chunk, cur.plen - cur.next)
+            if c > budget:
+                return
+            budget -= c
+            logits = self._run_chunk(slot, cur, c)
+            cur.next += c
+            if cur.next == cur.plen:  # final chunk landed: decode-eligible
+                self._prefill_order.pop(0)
+                self._cursors[slot] = None
+                self._start_decoding(cur.req, slot, cur.plen, logits,
+                                     cur.tables_np)
+
+    def _run_chunk(self, slot: int, cur: _PrefillCursor, c: int):
+        """One chunk of one slot's prompt through the jitted chunk step."""
+        batch = {"tokens": jnp.asarray(cur.tokens[cur.next:cur.next + c][None])}
+        start = cur.next
+        nv = self.cfg.num_vision_tokens
+        if self.cfg.is_encdec:
+            batch["enc_embeds"] = jnp.zeros(
+                (1, max(cur.plen // 2, 1), self.cfg.d_model), self._dtype)
+        if nv:
+            # the VLM patch prefix rides with chunk 0; later chunks shift
+            # past it — mirroring the unchunked prefill's concatenation
+            if start == 0:
+                batch["vision_embeds"] = jnp.zeros(
+                    (1, nv, self.cfg.d_model), self._dtype)
+            else:
+                start += nv
+        slots = jnp.asarray([slot], jnp.int32)
+        if self.layout == "paged":
+            logits, self.cache = self._chunk_paged(
+                self.params, batch, start, slots, self.cache,
+                jnp.asarray(cur.tables_np[None]))
+        else:
+            logits, self.cache = self._chunk_contig(
+                self.params, batch, start, slots, self.cache)
+        return logits
+
+    def _start_decoding(self, req: Request, slot: int, plen: int,
+                        logits, tables_np: Optional[np.ndarray]) -> None:
+        """Transition a slot to the decoding state: sample the first token
+        from the prefill's last-position logits and arm the device row.
+        Shared by unchunked admission and final-chunk completion."""
+        rk = jax.random.fold_in(self._base_key, req.uid)
+        first = int(sample(logits, req.params, jax.random.fold_in(rk, 0))[0])
+        req.first_token_time = time.perf_counter()
+        req.output_tokens.append(first)
+        self._count_token(req)
+
+        done = (req.params.max_new_tokens <= 1
+                or (req.params.eos_token >= 0
+                    and first == req.params.eos_token)
+                or plen >= self.max_len - 1)
+        self._write_slot_state(
+            slot, token=first, position=plen,
+            remaining=req.params.max_new_tokens - 1,
+            params=req.params, active=not done,
+            key=jax.random.fold_in(rk, 1))
+        if self.layout == "paged" and tables_np is not None:
+            self._state["block_tables"] = (
+                self._state["block_tables"].at[slot].set(
+                    jnp.asarray(tables_np)))
+        if done:
+            self._finish(slot)
 
     def _write_slot_state(self, slot: int, *, token: int, position: int,
                           remaining: int, params: SamplingParams,
-                          active: bool) -> None:
+                          active: bool, key) -> None:
         """Admission-time write of one slot's device state (lazy device ops)."""
         s = self._state
         s["tokens"] = s["tokens"].at[slot, 0].set(token)
@@ -367,6 +554,7 @@ class ServingEngine:
         s["top_k"] = s["top_k"].at[slot].set(params.top_k)
         s["eos"] = s["eos"].at[slot].set(params.eos_token)
         s["active"] = s["active"].at[slot].set(active)
+        s["keys"] = s["keys"].at[slot].set(key)
 
     def _admit_template(self, batch: Dict) -> Dict:
         """Fresh prefill cache for an admitted batch (traced under jit)."""
@@ -385,6 +573,24 @@ class ServingEngine:
             return live if path[-1].key in ("kp", "vp") else t
 
         return jax.tree_util.tree_map_with_path(pick, tmpl, live_cache)
+
+    def _slice_slots(self, cache, slots):
+        """Gather ``slots`` rows of the live cache into an n-row cache.
+
+        Mirror image of ``_merge_admitted``: pool leaves (``kp``/``vp``)
+        are shared across slots and pass through whole; per-slot leaves
+        take the batch-axis gather (axis 1 under ``groups``, 0 under
+        ``rest``); scalar bookkeeping passes through."""
+
+        def pick(path, leaf):
+            if path[-1].key in ("kp", "vp"):
+                return leaf
+            axis = 1 if path[0].key == "groups" else 0
+            if leaf.ndim <= axis:
+                return leaf
+            return jnp.take(leaf, slots, axis=axis)
+
+        return jax.tree_util.tree_map_with_path(pick, cache)
 
     def _merge_admitted(self, full_cache, part_cache, slots_for: List[int]):
         """Write a freshly prefilled ``len(slots_for)``-row cache into the
@@ -413,7 +619,10 @@ class ServingEngine:
         return jax.tree_util.tree_map_with_path(merge, full_cache, part_cache)
 
     def _decode_once(self) -> None:
-        if not any(s is not None for s in self.slots):
+        # prefilling slots (open cursor) are not decode-eligible: their
+        # first token is sampled only once the final chunk lands
+        if not any(req is not None and cur is None
+                   for req, cur in zip(self.slots, self._cursors)):
             return
         self._state, self.cache, out = self._step(
             self.params, self._state, self.cache)
@@ -443,6 +652,9 @@ class ServingEngine:
         req = self.slots[slot]
         if req is None:
             return
+        if self._cursors[slot] is not None:  # abandoned mid-prefill
+            self._cursors[slot] = None
+            self._prefill_order.remove(slot)
         self._flush_ring(slot)
         req.finish_time = time.perf_counter()
         self.finished.append(req)

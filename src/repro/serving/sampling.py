@@ -61,18 +61,48 @@ def sample_slots(
     top-k (a full per-slot sort would dominate the fused step at small
     batch); slot values above it are clamped to ``k_max``.
     """
-    B, V = logits.shape
-    k_max = min(k_max, V)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    # per-slot top-k cutoff from one static-k selection; k == 0 -> keep all
+    masked = _mask_slot_logits(logits, temperature, top_k, k_max)
+    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature <= 0.0, greedy, sampled)
+
+
+def _mask_slot_logits(logits, temperature, top_k, k_max):
+    """Shared temperature/top-k masking for the per-slot samplers."""
+    V = logits.shape[-1]
+    k_max = min(k_max, V)
     temp = jnp.maximum(temperature, 1e-6)[:, None]
     scaled = logits.astype(jnp.float32) / temp
-    # per-slot top-k cutoff from one static-k selection; k == 0 -> keep all
-    top_vals = jax.lax.top_k(scaled, k_max)[0]          # (B, k_max) desc
+    top_vals = jax.lax.top_k(scaled, k_max)[0]
     idx = jnp.clip(top_k - 1, 0, k_max - 1)[:, None]
     cutoff = jnp.take_along_axis(top_vals, idx, axis=-1)
     cutoff = jnp.where((top_k > 0)[:, None], cutoff, -jnp.inf)
-    masked = jnp.where(scaled < cutoff, -jnp.inf, scaled)
-    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    return jnp.where(scaled < cutoff, -jnp.inf, scaled)
+
+
+def sample_slots_keyed(
+    logits: jax.Array,
+    temperature: jax.Array,
+    top_k: jax.Array,
+    keys: jax.Array,
+    *,
+    k_max: int = 64,
+) -> jax.Array:
+    """``sample_slots`` with an independent PRNG key per slot.
+
+    keys (B, 2) uint32 — one legacy-format key per slot.  Each slot's draw
+    is a function of *its own* key and logits row only, which is what makes
+    sampled token streams invariant to scheduling: a request sampled at
+    slot 3 on step 40 of a chunked engine draws the same token as at slot 0
+    on step 7 of an unchunked one, provided its per-request key chain has
+    advanced the same number of times (once per emitted token).
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    masked = _mask_slot_logits(logits, temperature, top_k, k_max)
+    sampled = jax.vmap(
+        lambda k, row: jax.random.categorical(k, row)
+    )(keys, masked).astype(jnp.int32)
     return jnp.where(temperature <= 0.0, greedy, sampled)
 
 

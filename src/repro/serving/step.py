@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
-from repro.serving.sampling import sample_slots
+from repro.serving.sampling import sample_slots_keyed
 
 
 def make_prefill_step(cfg: ModelConfig) -> Callable:
@@ -54,11 +54,15 @@ def init_slot_state(max_batch: int, seed: int = 0,
     temperature  (B,)   f32    — per-slot sampling temperature (<=0 greedy)
     top_k        (B,)   int32  — per-slot top-k (0 = no filter)
     eos          (B,)   int32  — per-slot EOS id (-1 = never)
-    key                 PRNG   — split on device every step
+    keys         (B, 2) uint32 — per-slot PRNG key chain, split on device
+                 only when the slot emits a token (so a request's draws are
+                 a pure function of its own key + emitted-token index,
+                 independent of scheduling)
     block_tables (B, max_blocks) int32 — paged layout only (max_blocks > 0):
                  pool block per (slot, logical block); 0 = garbage block
     """
     B = max_batch
+    base = jax.random.PRNGKey(seed)
     state = {
         "tokens": jnp.zeros((B, 1), jnp.int32),
         "positions": jnp.zeros((B,), jnp.int32),
@@ -67,7 +71,7 @@ def init_slot_state(max_batch: int, seed: int = 0,
         "temperature": jnp.zeros((B,), jnp.float32),
         "top_k": jnp.zeros((B,), jnp.int32),
         "eos": jnp.full((B,), -1, jnp.int32),
-        "key": jax.random.PRNGKey(seed),
+        "keys": jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(B)),
     }
     if max_blocks > 0:
         state["block_tables"] = jnp.zeros((B, max_blocks), jnp.int32)
@@ -99,22 +103,24 @@ def make_decode_sample_step(cfg: ModelConfig, max_len: int,
       out[2] — 1 where the slot was active and therefore emitted out[0]
 
     Idle slots keep re-feeding their last token at a frozen position, so the
-    compiled executable never changes shape.  Contiguous layout: their
-    writes land in their own cache slot and are overwritten on the next
-    admission.  Paged layout (``state["block_tables"]`` present): their
-    table rows point at the reserved garbage block, so the writes land in
-    trash and the shared pool stays intact.
+    compiled executable never changes shape — but all of their cache and
+    recurrent-state writes are masked off (``update_mask=active`` threads
+    down to every cache kind).  That matters with chunked prefill: a slot
+    mid-prefill already owns its cache row / pool blocks, and the chunk
+    cursor is concurrently filling them between decode steps.  Each slot
+    also carries its own PRNG key chain, advanced only when it emits, so
+    sampled streams are invariant to how prefills and decodes interleave.
     """
 
     def step(params, state: Dict[str, jax.Array], cache) -> Tuple[Dict, Dict, jax.Array]:
+        active = state["active"]
         logits, new_cache = model_lib.decode_step(
             cfg, params, state["tokens"], state["positions"], cache,
-            block_tables=state.get("block_tables"))
-        key, sub = jax.random.split(state["key"])
-        tok = sample_slots(logits, state["temperature"], state["top_k"], sub,
-                           k_max=k_max)
+            block_tables=state.get("block_tables"), update_mask=active)
+        split = jax.vmap(jax.random.split)(state["keys"])   # (B, 2, 2)
+        tok = sample_slots_keyed(logits, state["temperature"], state["top_k"],
+                                 split[:, 0], k_max=k_max)
 
-        active = state["active"]
         act_i = active.astype(jnp.int32)
         tok = jnp.where(active, tok, state["tokens"][:, 0])
         positions = state["positions"] + act_i
@@ -128,7 +134,7 @@ def make_decode_sample_step(cfg: ModelConfig, max_len: int,
             positions=positions,
             active=active & ~done,
             remaining=remaining,
-            key=key,
+            keys=jnp.where(active[:, None], split[:, 1], state["keys"]),
         )
         out = jnp.stack([tok, done.astype(jnp.int32), act_i])
         return new_state, new_cache, out

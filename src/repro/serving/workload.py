@@ -112,6 +112,41 @@ def replay_trace(
     return out
 
 
+def interference_trace(
+    vocab_size: int,
+    *,
+    n_victims: int = 3,
+    victim_plen: int = 8,
+    victim_new: int = 256,
+    long_plen: int = 448,
+    long_new: int = 4,
+    t_long: float = 0.0,
+    seed: int = 0,
+    temperature: float = 0.0,
+) -> List[Arrival]:
+    """The TTFT/TPOT-interference scenario: short "victim" requests that
+    decode for a long time, plus one long-prompt request whose admission
+    would stall them without chunked prefill.  The long request arrives
+    last (at ``t_long``); ``benchmarks/serving_bench.py`` drives the trace
+    closed-loop and measures the victims' p95 inter-token gap while the
+    long prompt admits, chunked vs unchunked."""
+    rng = np.random.default_rng(seed)
+    arrivals = [
+        Arrival(
+            time_s=0.0,
+            prompt=rng.integers(0, vocab_size, victim_plen).astype(np.int32),
+            params=SamplingParams(temperature=temperature,
+                                  max_new_tokens=victim_new))
+        for _ in range(n_victims)
+    ]
+    arrivals.append(Arrival(
+        time_s=float(t_long),
+        prompt=rng.integers(0, vocab_size, long_plen).astype(np.int32),
+        params=SamplingParams(temperature=temperature,
+                              max_new_tokens=long_new)))
+    return arrivals
+
+
 class OpenLoopDriver:
     """Replay a trace against the wall clock while stepping the engine."""
 

@@ -165,6 +165,88 @@ def test_moe_combine_is_convex_mixture(seed):
                                np.asarray(expected), rtol=2e-3, atol=2e-4)
 
 
+# -- chunked-prefill scheduler invariants under random workloads ----------------
+
+_SERVE_MODEL = {}
+
+
+def _serve_model():
+    """Tiny serving model, built once across hypothesis examples."""
+    if not _SERVE_MODEL:
+        from repro.models import model as model_lib
+
+        cfg = ModelConfig(
+            name="prop-serve", num_layers=2, d_model=32, num_heads=2,
+            num_kv_heads=2, d_ff=64, vocab_size=128,
+            dtype="float32", param_dtype="float32",
+        ).validate()
+        params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
+        _SERVE_MODEL["cfg"], _SERVE_MODEL["params"] = cfg, params
+    return _SERVE_MODEL["cfg"], _SERVE_MODEL["params"]
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    chunk=st.integers(1, 20),
+    n=st.integers(2, 4),
+)
+@settings(max_examples=6, deadline=None)
+def test_chunked_scheduler_invariants(seed, chunk, n):
+    """Random Poisson workloads x random chunk sizes: no slot decodes
+    before its final chunk lands, paged block accounting balances to zero
+    after the drain, and blocks-in-use never exceeds what admission
+    reserved (so the fused step's append can never allocate)."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.workload import LengthDist, WorkloadSpec, poisson_trace
+
+    cfg, params = _serve_model()
+    spec = WorkloadSpec(
+        arrival_rate=0.0, num_requests=n,
+        prompt_len=LengthDist(kind="uniform", low=2, high=40),
+        output_len=LengthDist(kind="uniform", low=1, high=6),
+        temperature=0.7, top_k=8, seed=seed,
+    )
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8, cache_layout="paged",
+                        kv_block_size=16, prefill_chunk=chunk, seed=seed)
+    total_free = len(eng._free_blocks)
+    for a in poisson_trace(spec, cfg.vocab_size):
+        eng.submit(a.prompt, a.params)
+
+    for _ in range(500):
+        if not eng.busy:
+            break
+        eng.step()
+        reserved = 0
+        for slot in range(eng.max_batch):
+            req, cur = eng.slots[slot], eng._cursors[slot]
+            if cur is not None:
+                # prefilling: not decode-eligible, emits nothing
+                assert cur.req is req
+                assert req.output_tokens == [] and req.first_token_time == 0.0
+                assert not bool(eng._state["active"][slot])
+                assert 0 <= cur.next < cur.plen  # open cursors retire at plen
+            if req is not None:
+                nb = eng._blocks_for(
+                    eng._bucketed(min(len(req.prompt), eng.max_len - 1)),
+                    req.params.max_new_tokens)
+                assert len(eng._slot_blocks[slot]) <= nb
+                reserved += len(eng._slot_blocks[slot])
+            else:
+                assert not eng._slot_blocks[slot]
+        # in-use == sum of live reservations; usage never exceeds them
+        assert eng.blocks_in_use == reserved
+        assert eng.kv_bytes_in_use() <= (
+            eng._n_attn_layers * reserved * eng.block_size * eng._kv_tok_bytes)
+    assert not eng.busy, "workload failed to drain"
+    eng.flush()
+    # block accounting balances to zero after the drain + flush
+    assert eng.blocks_in_use == 0
+    assert len(eng._free_blocks) == total_free
+    assert all(not b for b in eng._slot_blocks)
+    assert len(eng.finished) == n
+
+
 # -- checkpoint: roundtrip arbitrary nested trees -------------------------------
 
 @given(seed=st.integers(0, 2**16), depth=st.integers(1, 3))

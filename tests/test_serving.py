@@ -134,7 +134,25 @@ def test_percentile_nearest_rank():
     assert _percentile([10.0, 20.0], 50) == 10.0
     assert _percentile([1, 2, 3, 4], 50) == 2
     assert _percentile([1, 2, 3, 4], 95) == 4
-    assert _percentile([5.0], 99) == 5.0
+    # singletons at every quantile, and the empty list (an engine with no
+    # completed requests) degrades to 0.0 instead of an IndexError
+    for q in (0, 50, 99, 100):
+        assert _percentile([5.0], q) == 5.0
+    for q in (0, 50, 95, 100):
+        assert _percentile([], q) == 0.0
+
+
+def test_latency_summary_zero_completed_requests(small_model):
+    """An engine that never completed a request reports an empty summary
+    (and flush() is safe) rather than crashing on empty percentiles."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=1, max_len=64)
+    assert eng.latency_summary() == {}
+    eng.flush()
+    assert eng.latency_summary() == {}
+    # a submitted-but-never-served request still doesn't count
+    eng.submit(np.zeros(4, np.int32), SamplingParams(max_new_tokens=2))
+    assert eng.latency_summary() == {}
 
 
 def test_engine_clamps_top_k_consistently(small_model):
