@@ -28,7 +28,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import model as model_lib
 from repro.serving.engine import ServingEngine
 from repro.serving.workload import (LengthDist, OpenLoopDriver, WorkloadSpec,
-                                    poisson_trace, replay_trace)
+                                    poisson_trace, replay_trace,
+                                    shared_prefix_trace)
 from repro.sharding import rules
 
 
@@ -92,7 +93,27 @@ def main(argv=None) -> int:
                     help="prompt tokens of chunk work per engine step "
                          "(0 = one chunk; clamped to >= --prefill-chunk); "
                          "only meaningful with --prefill-chunk")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="block-level prefix caching (paged layout only): "
+                         "hash full prompt blocks and share resident "
+                         "read-only pool blocks across requests with a "
+                         "common prefix, skipping their prefill")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="generate a shared-prefix workload instead of "
+                         "independent prompts: every request starts with "
+                         "one of --shared-prefixes fixed system prompts of "
+                         "this many tokens (0 = off)")
+    ap.add_argument("--shared-prefixes", type=int, default=2,
+                    help="number of distinct system prompts in the "
+                         "shared-prefix mixture")
+    ap.add_argument("--shared-suffix-len", type=int, default=16,
+                    help="user-suffix tokens appended to each shared "
+                         "prefix (fixed: equal padded lengths are what "
+                         "lets prefix blocks match); the --prompt-len-* "
+                         "flags are ignored in shared-prefix mode")
     args = ap.parse_args(argv)
+    if args.prefix_cache and args.cache_layout != "paged":
+        ap.error("--prefix-cache requires --cache-layout paged")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     plo = max(int(args.prompt_len_mean // 4), 1)
@@ -115,6 +136,14 @@ def main(argv=None) -> int:
         arrivals = replay_trace(schedule, cfg.vocab_size,
                                 seed=args.seed,
                                 temperature=args.temperature, top_k=20)
+    elif args.shared_prefix_len > 0:
+        arrivals = shared_prefix_trace(
+            cfg.vocab_size, num_requests=args.requests,
+            shared_prefix_len=args.shared_prefix_len,
+            num_prefixes=args.shared_prefixes,
+            suffix_len=args.shared_suffix_len,
+            max_new=args.max_new, arrival_rate=args.arrival_rate,
+            seed=args.seed, temperature=args.temperature, top_k=20)
     else:
         arrivals = poisson_trace(spec, cfg.vocab_size)
 
@@ -127,7 +156,8 @@ def main(argv=None) -> int:
                                kv_block_size=args.kv_block_size,
                                kv_num_blocks=args.kv_num_blocks,
                                prefill_chunk=args.prefill_chunk,
-                               prefill_budget=args.prefill_budget)
+                               prefill_budget=args.prefill_budget,
+                               prefix_cache=args.prefix_cache)
         driver = OpenLoopDriver(engine, arrivals)
         if reader is not None:
             monitor = PowerMonitor(reader)

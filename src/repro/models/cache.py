@@ -25,7 +25,8 @@ their memory is already bounded by the window, so paging buys nothing.
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from collections import OrderedDict
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +44,174 @@ def blocks_per_slot(max_len: int, block_size: int) -> int:
 def default_num_blocks(batch: int, max_len: int, block_size: int) -> int:
     """Worst-case pool: every slot full, plus the reserved garbage block."""
     return batch * blocks_per_slot(max_len, block_size) + 1
+
+
+# -- host-side block-pool bookkeeping (paged layout) -------------------------
+
+_FNV_OFFSET = 0xCBF29CE484222325
+_FNV_PRIME = 0x100000001B3
+_MASK64 = (1 << 64) - 1
+
+
+def hash_token_blocks(tokens, block_size: int) -> List[int]:
+    """Chained FNV-1a hash per *full* ``block_size`` block of ``tokens``.
+
+    ``hashes[i]`` covers ``tokens[0 : (i+1) * block_size]`` — block ``i``'s
+    hash folds in block ``i-1``'s, so a match at index ``i`` implies (up to
+    hash collision) the whole token prefix matches, and with it the K/V
+    content of pool blocks ``0..i`` (the prompt occupies absolute positions
+    from 0, so block index determines the RoPE positions baked into the
+    keys).  A trailing partial block is not hashed: it is still being
+    written to (by the rest of the prompt or by decode) and must never be
+    shared."""
+    hashes: List[int] = []
+    h = _FNV_OFFSET
+    for i in range(len(tokens) // block_size):
+        for t in tokens[i * block_size:(i + 1) * block_size]:
+            h = ((h ^ (int(t) & _MASK64)) * _FNV_PRIME) & _MASK64
+        hashes.append(h)
+    return hashes
+
+
+class BlockPool:
+    """Host-side bookkeeping for the paged KV block pool: the LIFO free
+    stack, plus — for block-level prefix caching — per-block refcounts, the
+    ``hash -> block`` registry, and an LRU pool of evictable cached blocks.
+
+    A block's lifecycle::
+
+        free stack --allocate--> private (owned by one request)
+          private --register--> shared (refcount = live readers)
+          shared --lookup hit--> refcount += 1 (another reader)
+          shared --freed by last reader--> evictable LRU (content intact)
+          evictable --lookup hit--> shared again (refcount 1)
+          evictable --pool pressure--> evicted: unregistered, reallocated
+          private --freed--> free stack
+
+    Blocks never sit in two places: ``free_stack``, ``evictable``, and the
+    engine's live slot tables partition blocks ``1..num_blocks-1`` (block 0
+    is the reserved garbage block).  A registered block becomes visible to
+    ``lookup`` only once ``mark_ready`` confirms its K/V was fully written
+    (a chunked prefill registers at admission but fills over many steps).
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        # LIFO free stack over blocks 1..N-1 (0 = reserved garbage block)
+        self.free_stack: List[int] = list(range(num_blocks - 1, 0, -1))
+        self.refs: Dict[int, int] = {}        # registered block -> live readers
+        self.block_of: Dict[int, int] = {}    # prefix hash -> block id
+        self.hash_of: Dict[int, int] = {}     # block id -> prefix hash
+        self.ready: set = set()               # registered blocks fully written
+        self.evictable: "OrderedDict[int, None]" = OrderedDict()  # LRU
+        self.evictions = 0
+
+    @property
+    def available(self) -> int:
+        """Blocks an admission may claim: free plus evictable-cached."""
+        return len(self.free_stack) + len(self.evictable)
+
+    @property
+    def in_use(self) -> int:
+        """Blocks owned by live requests (excludes free and cached-idle)."""
+        return max(self.num_blocks - 1, 0) - self.available
+
+    def allocate(self, n: int) -> List[int]:
+        """Pop ``n`` blocks, evicting LRU cached blocks under pressure."""
+        assert n <= self.available, (
+            f"allocate({n}) with only {self.available} blocks available")
+        out = []
+        for _ in range(n):
+            if self.free_stack:
+                out.append(self.free_stack.pop())
+            else:
+                out.append(self._evict_lru())
+        return out
+
+    def _evict_lru(self) -> int:
+        blk, _ = self.evictable.popitem(last=False)
+        # an evictable block by construction has no live readers
+        assert self.refs.get(blk, 0) == 0, f"evicting live block {blk}"
+        self._unregister(blk)
+        self.evictions += 1
+        return blk
+
+    def _unregister(self, blk: int) -> None:
+        h = self.hash_of.pop(blk, None)
+        if h is not None:
+            del self.block_of[h]
+        self.refs.pop(blk, None)
+        self.ready.discard(blk)
+
+    def register(self, h: int, blk: int) -> bool:
+        """Claim hash ``h`` for ``blk`` (owner holds one ref; not yet
+        ready).  False if the hash is already registered — the caller's
+        block then simply stays private."""
+        if h in self.block_of:
+            return False
+        self.block_of[h] = blk
+        self.hash_of[blk] = h
+        self.refs[blk] = 1
+        return True
+
+    def mark_ready(self, blk: int) -> None:
+        """Make a registered block's content visible to ``lookup``."""
+        if blk in self.hash_of:
+            self.ready.add(blk)
+
+    def peek(self, hashes: List[int]) -> int:
+        """Conservative hit estimate for admission budgeting: leading
+        blocks that are registered, ready, and currently referenced.  An
+        evictable block is *not* counted — an interleaved allocation could
+        evict it before the admission commits — so ``peek`` never
+        overstates what ``lookup`` will find."""
+        n = 0
+        for h in hashes:
+            blk = self.block_of.get(h)
+            if blk is None or blk not in self.ready or self.refs.get(blk, 0) <= 0:
+                break
+            n += 1
+        return n
+
+    def lookup(self, hashes: List[int]) -> List[int]:
+        """Longest ready cached prefix of ``hashes``; increfs each matched
+        block (resurrecting evictable ones) and returns their ids in
+        prefix order."""
+        out: List[int] = []
+        for h in hashes:
+            blk = self.block_of.get(h)
+            if blk is None or blk not in self.ready:
+                break
+            if self.refs[blk] == 0:
+                del self.evictable[blk]  # resurrected before eviction
+            self.refs[blk] += 1
+            out.append(blk)
+        return out
+
+    def free(self, blocks: List[int]) -> None:
+        """Return a request's blocks.  Shared blocks decref — the last
+        reader parks the block (content and registration intact) on the
+        evictable LRU; a registered-but-never-ready block (its request
+        finished mid-prefill) is useless to future readers and is
+        unregistered outright.  Private blocks go back on the free stack.
+
+        Parking walks the table in *reverse* so a chain's tail blocks are
+        LRU-oldest and evict first: lookups match a leading run of the
+        chained hashes, so evicting a chain head would strand the rest of
+        the cached chain as unmatchable dead weight, while evicting tails
+        degrades a cached prefix gracefully from the right."""
+        for blk in reversed(blocks):
+            if blk in self.hash_of:
+                self.refs[blk] -= 1
+                assert self.refs[blk] >= 0, f"double free of block {blk}"
+                if self.refs[blk] == 0:
+                    if blk in self.ready:
+                        self.evictable[blk] = None
+                    else:
+                        self._unregister(blk)
+                        self.free_stack.append(blk)
+            else:
+                self.free_stack.append(blk)
 
 
 def init_attn_cache(

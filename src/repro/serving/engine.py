@@ -1,96 +1,17 @@
-"""Device-resident continuous-batching serving engine with paged KV cache.
+"""Device-resident continuous-batching serving engine (vLLM-lite).
 
-Design (vLLM-lite, static-shape TPU-friendly):
+One fused jitted step (decode + per-slot sampling + finish detection, one
+host sync per step), a paged block-pool KV cache with a host-managed free
+stack, batched multi-slot admission, Sarathi-style chunked prefill, and
+block-level prefix caching (``prefix_cache=True``): full prompt blocks are
+content-hashed and shared read-only across requests through refcounts, so
+a request whose prefix is already resident skips straight to its first
+non-cached block.  Sampling is scheduling-invariant (per-request PRNG
+chains), so every layout/scheduling combination emits byte-identical token
+streams for the same seed.
 
-* **One fused jitted step** (``serving.step.make_decode_sample_step``)
-  performs decode forward + per-slot sampling + finish detection.  All
-  per-slot scheduler state — next tokens, positions, active mask, sampling
-  params (temperature / top-k / EOS), remaining-token budgets, block
-  tables, and the PRNG key — lives on device and threads through the step
-  without touching the host.  The executable is compiled once for
-  (max_batch, max_len) and replayed every step (the paper's
-  CUDA-graph-cached generation, in jit form); on accelerators the cache
-  and state buffers are **donated** into the step so XLA updates the KV
-  cache in place instead of round-tripping a copy through the allocator.
-* **One host sync per step.**  The step returns a packed (3, B) int32 array
-  (token, done-flag, emitted-flag per slot); the host fetches it with a
-  single transfer and appends the token vector to a numpy ring buffer.  No
-  ``int(t[0])`` per slot, no per-slot sampling dispatches.
-* **Paged KV cache** (``cache_layout="paged"``).  Instead of reserving a
-  worst-case contiguous ``(max_batch, max_len)`` KV stripe per slot, each
-  full-context attention layer keeps a global block pool ``(num_blocks,
-  block_size, H, D)`` shared by every slot.  A host-managed free stack
-  hands out blocks at admission — enough to cover the prompt plus the
-  request's ``max_new_tokens`` budget, so the in-step append never
-  allocates — and ``_finish`` pushes them back for reuse.  The per-slot
-  int32 block table rides in the device state; the fused step's append
-  writes token ``p`` to ``pool[table[slot, p // bs], p % bs]`` and the
-  Pallas decode kernel resolves the table via scalar prefetch (no gather
-  materializes).  Pool block 0 is reserved garbage: idle slots write their
-  frozen token there, keeping the executable static-shape.  When the free
-  stack can't cover the head-of-queue request, admission stops (FCFS
-  backpressure) until running requests finish and return blocks.
-  Sliding-window layers keep their ring buffers (already window-bounded);
-  the contiguous layout remains selectable and both layouts emit identical
-  token streams for identical seeds.
-* **Batched continuous admission.**  Whenever slots free, every waiting
-  request sharing the head-of-queue's prompt-length bucket is prefilled in
-  *one* batched call (instead of batch=1 per admit); the resulting KV is
-  written into the batched cache per slot (contiguous) or scattered into
-  freshly allocated pool blocks (paged).  Admission updates the device
-  state with O(1)-sized ``.at[slot].set`` writes — lazy device ops, not
-  syncs.  Prompts longer than ``max_len - 1`` keep their *last* ``plen``
-  tokens and are flagged ``truncated``.
-* **Chunked prefill** (``prefill_chunk=N``, Sarathi-style).  Unchunked
-  admission stalls every in-flight decode slot while a new prompt prefills
-  in one shot — exactly the TTFT/TPOT interference the paper's latency
-  metrics penalize.  With chunking enabled a slot has **three** states
-  instead of two:
-
-    - *free*        — ``slots[s] is None``;
-    - *prefilling*  — ``slots[s]`` set and ``_cursors[s]`` holds a chunk
-      cursor: the bucketed (padded) prompt plus the next position to
-      prefill.  The slot owns its cache row / pool blocks (reserved at
-      admission, exactly like unchunked) but is **not** decode-eligible;
-    - *decoding*    — cursor retired: the final chunk landed, the first
-      token was sampled from its logits, and the device state row went
-      active.
-
-  Each engine step spends a **prefill token budget** (``prefill_budget``,
-  default = chunk size) advancing cursors FCFS — a cursor's next chunk is
-  processed only if it fits the remaining budget, so one step never does
-  more than ~one chunk of prompt work — and *then* runs the fused decode
-  step for the decoding slots.  Decode therefore never waits on more than
-  one chunk of another request's prompt: admission cost is spread across
-  steps instead of stalling the batch.  Chunk N attends to cached chunks
-  0..N-1 plus itself (``models.model.prefill_chunk``); the chunk's K/V is
-  scattered mid-prompt into whichever layout is live (contiguous rows,
-  ring buffers, or pool blocks through the block table).  The slot's cache
-  row is reset to init values at admission (unchunked admission implicitly
-  resets by overwriting the whole row), and the fused step masks all cache
-  writes of non-active slots so interleaved decode steps cannot corrupt a
-  half-built prefill.
-* **Scheduling-invariant sampling.**  Every request's tokens are drawn
-  from a per-request PRNG chain: token 0 from ``fold_in(fold_in(base,
-  uid), 0)`` at admission, later tokens from a per-slot on-device key
-  chain seeded with ``fold_in(fold_in(base, uid), 1)`` and split once per
-  emitted token.  Streams are therefore a pure function of (seed, uid,
-  logits) — chunked, unchunked, contiguous, and paged engines all emit
-  byte-identical streams for the same seed (``tests/test_chunked_prefill``
-  holds them to that).
-* **Open-loop friendly.**  ``step()`` performs one admit + chunk + decode
-  round so a traffic driver (``serving.workload``) can interleave Poisson
-  arrivals with engine work; ``run()`` is the closed-loop drain used by
-  tests.
-* **Per-request energy attribution.**  With a ``core.energy.PowerMonitor``
-  attached, the engine tiles wall-clock into windows (closed whenever a
-  request finishes and at drain); each window's joules — step-function
-  integral over the monitor's samples, exactly additive across windows —
-  are split over the requests proportionally to the tokens they emitted in
-  that window and accumulated on ``Request.joules``.
-
-Follow-on work (block-level prefix caching) is tracked in ROADMAP.md
-§Serving.
+The full design guide — request lifecycle, pool/refcount bookkeeping, and
+the invariants the test suites hold — lives in ``docs/serving.md``.
 """
 
 from __future__ import annotations
@@ -129,6 +50,10 @@ class Request:
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     truncated: bool = False
     joules: float = 0.0
+    # memoized (plen, block hashes) — the prompt and its bucket never
+    # change, and admission may probe a backpressured request every step
+    _hash_cache: Optional[tuple] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def ttft_s(self) -> float:
@@ -161,6 +86,9 @@ class _PrefillCursor:
     plen: int                     # bucketed prompt length
     next: int = 0                 # next prompt position to prefill
     tables_np: Optional[np.ndarray] = None  # (max_blocks,) paged table row
+    # prefix cache: (end position, block) pairs this cursor registered;
+    # each block is marked ready once the cursor passes its end
+    pending_ready: List = dataclasses.field(default_factory=list)
 
 
 class ServingEngine:
@@ -180,8 +108,22 @@ class ServingEngine:
         kv_num_blocks: int = 0,
         prefill_chunk: int = 0,
         prefill_budget: int = 0,
+        prefix_cache: bool = False,
     ):
         assert cache_layout in ("contiguous", "paged"), cache_layout
+        if prefix_cache:
+            if cache_layout != "paged":
+                raise ValueError(
+                    "prefix_cache requires cache_layout='paged': only pool "
+                    "blocks can be shared read-only across requests")
+            bad = sorted({k for k in cfg.blocks() if k not in ("attn", "ffn")})
+            if bad or cfg.is_encdec or cfg.num_vision_tokens:
+                raise ValueError(
+                    f"prefix_cache shares paged full-attention KV blocks "
+                    f"only; {cfg.name!r} carries per-slot state that a "
+                    f"skipped prefill would leave stale "
+                    f"({', '.join(bad) or 'cross-attention/vision prefix'})")
+        self.prefix_cache = prefix_cache
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -210,17 +152,27 @@ class ServingEngine:
         if cache_layout == "paged":
             self.num_blocks = kv_num_blocks or cache_lib.default_num_blocks(
                 max_batch, max_len, kv_block_size)
-            assert self.num_blocks - 1 >= self.max_blocks_per_slot, (
-                f"pool of {self.num_blocks} blocks (block 0 reserved) cannot "
-                f"hold one worst-case request of {self.max_blocks_per_slot} "
-                f"blocks")
-            # LIFO free stack over blocks 1..N-1 (0 = reserved garbage block)
-            self._free_blocks: List[int] = list(range(self.num_blocks - 1, 0, -1))
+            min_blocks = self.max_blocks_per_slot + 1
+            if self.num_blocks < min_blocks:
+                raise ValueError(
+                    f"--kv-num-blocks={self.num_blocks} is too small: "
+                    f"max_len={max_len} at block size {kv_block_size} needs "
+                    f"{self.max_blocks_per_slot} blocks for one worst-case "
+                    f"request, plus the reserved garbage block 0 — pass "
+                    f"--kv-num-blocks >= {min_blocks} (or 0 for the "
+                    f"worst-case default of "
+                    f"{cache_lib.default_num_blocks(max_batch, max_len, kv_block_size)})")
+            self._pool = cache_lib.BlockPool(self.num_blocks)
         else:
             self.num_blocks = 0
-            self._free_blocks = []
+            self._pool = cache_lib.BlockPool(1)  # empty pool, no free blocks
         self._slot_blocks: List[List[int]] = [[] for _ in range(max_batch)]
         self.peak_blocks_in_use = 0
+        # prefix-cache counters (reported by latency_summary)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_blocks_reused = 0
+        self.prefill_tokens_skipped = 0
 
         self.cache = model_lib.init_cache(
             cfg, max_batch, max_len, dtype, layout=cache_layout,
@@ -356,10 +308,50 @@ class ServingEngine:
                    self.max_blocks_per_slot)
 
     @property
+    def _free_blocks(self) -> List[int]:
+        """The pool's LIFO free stack (read-only view for tests/metrics)."""
+        return self._pool.free_stack
+
+    @property
     def blocks_in_use(self) -> int:
+        """Blocks owned by live requests.  Evictable cached blocks (kept
+        only for future prefix hits, reclaimed on pressure) don't count."""
         if self.layout != "paged":
             return 0
-        return (self.num_blocks - 1) - len(self._free_blocks)
+        return self._pool.in_use
+
+    # -- prefix cache ------------------------------------------------------------
+    def _padded_prompt(self, req: Request, plen: int) -> np.ndarray:
+        """The bucketed, left-padded token row admission actually prefills
+        (prompts longer than the bucket keep their newest context)."""
+        use = req.prompt
+        if len(use) > plen:
+            use = use[-plen:]
+            req.truncated = True
+        toks = np.zeros(plen, np.int32)
+        toks[-len(use):] = use
+        return toks
+
+    def _lookup_width(self, plen: int) -> int:
+        """Cacheable-prefix cap: the block holding the last prompt position
+        is always recomputed, so the final chunk's logits (which seed the
+        first sampled token) exist even on a full-prefix hit."""
+        return (plen - 1) // self.block_size
+
+    def _hashes_for(self, req: Request, plen: int) -> List[int]:
+        """The request's full-block hash chain, memoized on the request —
+        a backpressured queue head is re-probed every engine step."""
+        if req._hash_cache is None or req._hash_cache[0] != plen:
+            req._hash_cache = (plen, cache_lib.hash_token_blocks(
+                self._padded_prompt(req, plen), self.block_size))
+        return req._hash_cache[1]
+
+    def _peek_hit(self, req: Request, plen: int) -> int:
+        """Conservative admission-budget estimate of reusable blocks."""
+        if not self.prefix_cache:
+            return 0
+        hashes = self._hashes_for(req, plen)
+        return self._pool.peek(hashes[:self._lookup_width(plen)])
 
     def _admit(self) -> None:
         while self.queue:
@@ -379,8 +371,13 @@ class ServingEngine:
                 if self._bucketed(len(req.prompt)) != plen:
                     continue
                 if self.layout == "paged":
-                    nb = self._blocks_for(plen, req.params.max_new_tokens)
-                    if blocks_reserved + nb > len(self._free_blocks):
+                    # prefix hits shrink the new-block need; _peek_hit is
+                    # conservative (never counts a block an interleaved
+                    # allocation could evict), so commit-time lookup can
+                    # only find more hits than budgeted here, never fewer
+                    nb = (self._blocks_for(plen, req.params.max_new_tokens)
+                          - self._peek_hit(req, plen))
+                    if blocks_reserved + nb > self._pool.available:
                         break
                     blocks_reserved += nb
                 picked.append(req)
@@ -397,16 +394,35 @@ class ServingEngine:
 
     def _admit_batch(self, reqs: List[Request], slots_for: List[int],
                      plen: int) -> None:
-        """One batched prefill for ``reqs`` (all bucketed to ``plen``)."""
+        """One batched prefill for ``reqs`` (all bucketed to ``plen``).
+
+        With the prefix cache on, requests whose hashed prompt prefix is
+        already resident are peeled off first and admitted through the
+        suffix-only path (``_admit_prefix_hit``); the rest prefill cold in
+        one batched call and register their full prompt blocks for future
+        sharers.  Two same-prefix requests inside one cold batch register
+        first-come-first-served — the loser's blocks simply stay private."""
+        padded = [self._padded_prompt(r, plen) for r in reqs]
+        hashes: List[Optional[List[int]]] = [None] * len(reqs)
+        if self.prefix_cache:
+            keep: List[int] = []
+            for i, (req, slot) in enumerate(zip(reqs, slots_for)):
+                hashes[i] = self._hashes_for(req, plen)
+                hit = self._pool.lookup(hashes[i][:self._lookup_width(plen)])
+                self.prefix_lookups += 1
+                if hit:
+                    self._admit_prefix_hit(req, slot, plen, padded[i],
+                                           hashes[i], hit)
+                else:
+                    keep.append(i)
+            if not keep:
+                return
+            reqs = [reqs[i] for i in keep]
+            slots_for = [slots_for[i] for i in keep]
+            padded = [padded[i] for i in keep]
+            hashes = [hashes[i] for i in keep]
         n = len(reqs)
-        toks = np.zeros((n, plen), np.int32)
-        for r, req in enumerate(reqs):
-            use = req.prompt
-            if len(use) > plen:  # keep the newest context, flag the loss
-                use = use[-plen:]
-                req.truncated = True
-            toks[r, -len(use):] = use
-        batch = {"tokens": jnp.asarray(toks)}
+        batch = {"tokens": jnp.asarray(np.stack(padded))}
         if self.cfg.is_encdec:
             batch["enc_embeds"] = jnp.zeros(
                 (n, max(plen // 2, 1), self.cfg.d_model), self._dtype)
@@ -418,9 +434,15 @@ class ServingEngine:
             tables_np = np.zeros((n, self.max_blocks_per_slot), np.int32)
             for r, (req, slot) in enumerate(zip(reqs, slots_for)):
                 nb = self._blocks_for(plen, req.params.max_new_tokens)
-                blocks = [self._free_blocks.pop() for _ in range(nb)]
+                blocks = self._pool.allocate(nb)
                 tables_np[r, :nb] = blocks
                 self._slot_blocks[slot] = blocks
+                if self.prefix_cache:
+                    # whole-prompt prefill lands below; the blocks are
+                    # ready the moment any later admission could read them
+                    for i in range(plen // self.block_size):
+                        if self._pool.register(hashes[r][i], blocks[i]):
+                            self._pool.mark_ready(blocks[i])
             self.peak_blocks_in_use = max(self.peak_blocks_in_use,
                                           self.blocks_in_use)
             tables = jnp.asarray(tables_np)
@@ -436,6 +458,53 @@ class ServingEngine:
                 req, slot, plen, logits[r:r + 1],
                 tables_np[r] if self.layout == "paged" else None)
 
+    def _claim_prefix_blocks(self, req: Request, slot: int, plen: int,
+                             hashes: List[int], hit: List[int]):
+        """Commit one admission's pool blocks: reused prefix blocks first
+        (already increfed by ``lookup``), freshly allocated ones after, in
+        table order.  Full prompt blocks past the hit are registered for
+        future sharers (not yet ready — the caller fills them).  Returns
+        ``(tables_np, start, pending)``: the slot's table row, the first
+        position prefill must compute, and the (end, block) pairs to mark
+        ready as the fill passes them."""
+        h = len(hit)
+        nb = self._blocks_for(plen, req.params.max_new_tokens)
+        blocks = hit + self._pool.allocate(nb - h)
+        tables_np = np.zeros(self.max_blocks_per_slot, np.int32)
+        tables_np[:nb] = blocks
+        self._slot_blocks[slot] = blocks
+        pending = []
+        for i in range(h, plen // self.block_size):
+            if self._pool.register(hashes[i], blocks[i]):
+                pending.append(((i + 1) * self.block_size, blocks[i]))
+        if h:
+            self.prefix_hits += 1
+        self.prefix_blocks_reused += h
+        start = h * self.block_size
+        self.prefill_tokens_skipped += start
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        return tables_np, start, pending
+
+    def _admit_prefix_hit(self, req: Request, slot: int, plen: int,
+                          toks: np.ndarray, hashes: List[int],
+                          hit: List[int]) -> None:
+        """Unchunked admission of a request with resident prefix blocks:
+        only the suffix (first non-cached block onward) is prefilled, as a
+        single chunk against the live pool — the reused blocks feed the
+        suffix's attention through the block table, and the partial tail
+        block is recomputed privately so decode writes never touch a
+        shared block."""
+        tables_np, start, pending = self._claim_prefix_blocks(
+            req, slot, plen, hashes, hit)
+        self.slots[slot] = req
+        cur = _PrefillCursor(req=req, tokens=toks, plen=plen, next=start,
+                             tables_np=tables_np)
+        logits = self._run_chunk(slot, cur, plen - start)
+        for _, blk in pending:  # suffix fully written: publish its blocks
+            self._pool.mark_ready(blk)
+        self._start_decoding(req, slot, plen, logits, tables_np)
+
     def _admit_chunked(self, reqs: List[Request], slots_for: List[int],
                        plen: int) -> None:
         """Admission with chunked prefill: reserve the slot (and pool
@@ -445,22 +514,29 @@ class ServingEngine:
         and stale positions / recurrent state from the previous occupant
         would otherwise leak into the chunk's attention and state."""
         for req, slot in zip(reqs, slots_for):
-            use = req.prompt
-            if len(use) > plen:  # keep the newest context, flag the loss
-                use = use[-plen:]
-                req.truncated = True
-            toks = np.zeros(plen, np.int32)
-            toks[-len(use):] = use
+            toks = self._padded_prompt(req, plen)
             tables_np = None
-            if self.layout == "paged":
+            start = 0
+            pending: List = []
+            if self.layout == "paged" and self.prefix_cache:
+                # reuse resident prefix blocks: the cursor starts at the
+                # first non-cached block and its chunks attend to the
+                # shared blocks through the block table
+                hashes = self._hashes_for(req, plen)
+                hit = self._pool.lookup(hashes[:self._lookup_width(plen)])
+                self.prefix_lookups += 1
+                tables_np, start, pending = self._claim_prefix_blocks(
+                    req, slot, plen, hashes, hit)
+            elif self.layout == "paged":
                 nb = self._blocks_for(plen, req.params.max_new_tokens)
-                blocks = [self._free_blocks.pop() for _ in range(nb)]
+                blocks = self._pool.allocate(nb)
                 tables_np = np.zeros(self.max_blocks_per_slot, np.int32)
                 tables_np[:nb] = blocks
                 self._slot_blocks[slot] = blocks
             self.slots[slot] = req
             self._cursors[slot] = _PrefillCursor(
-                req=req, tokens=toks, plen=plen, tables_np=tables_np)
+                req=req, tokens=toks, plen=plen, next=start,
+                tables_np=tables_np, pending_ready=pending)
             self._prefill_order.append(slot)
         if self.layout == "paged":
             self.peak_blocks_in_use = max(self.peak_blocks_in_use,
@@ -483,6 +559,10 @@ class ServingEngine:
             budget -= c
             logits = self._run_chunk(slot, cur, c)
             cur.next += c
+            # publish registered blocks the cursor has fully written, so
+            # later admissions can share this still-prefilling prompt
+            while cur.pending_ready and cur.pending_ready[0][0] <= cur.next:
+                self._pool.mark_ready(cur.pending_ready.pop(0)[1])
             if cur.next == cur.plen:  # final chunk landed: decode-eligible
                 self._prefill_order.pop(0)
                 self._cursors[slot] = None
@@ -663,9 +743,10 @@ class ServingEngine:
         # decode finishes; clear explicitly for admission-time finishes
         self._state["active"] = self._state["active"].at[slot].set(False)
         if self.layout == "paged" and self._slot_blocks[slot]:
-            # push the slot's blocks back on the free stack and point its
-            # table row at the garbage block so idle writes land in trash
-            self._free_blocks.extend(self._slot_blocks[slot])
+            # return the slot's blocks (shared blocks decref and park on
+            # the evictable LRU; private ones hit the free stack) and point
+            # its table row at the garbage block so idle writes land in trash
+            self._pool.free(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
             self._state["block_tables"] = (
                 self._state["block_tables"].at[slot].set(
@@ -755,6 +836,12 @@ class ServingEngine:
                 summary[f"{name}_p{q}_ms"] = _percentile(xs, q) * 1e3
         summary["kv_bytes_peak"] = self.kv_bytes_in_use(peak=True)
         summary["kv_bytes_worst_case"] = self.kv_bytes_worst_case
+        if self.prefix_cache:
+            summary["prefix_lookups"] = self.prefix_lookups
+            summary["prefix_hit_rate"] = (
+                self.prefix_hits / max(self.prefix_lookups, 1))
+            summary["prefix_blocks_reused"] = self.prefix_blocks_reused
+            summary["prefill_tokens_skipped"] = self.prefill_tokens_skipped
         if self.monitor is not None:
             total_j = sum(r.joules for r in self.finished)
             summary["joules_total"] = total_j

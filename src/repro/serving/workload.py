@@ -11,6 +11,8 @@ the wall clock (open-loop: arrival times do not depend on service times).
 * ``replay_trace`` — deterministic replay of an explicit
   ``(time_s, prompt_len, max_new_tokens)`` schedule, for reproducible
   A/B runs and tests.
+* ``shared_prefix_trace`` — mixture of K fixed system prompts with random
+  user suffixes, the workload block-level prefix caching targets.
 * ``OpenLoopDriver`` — interleaves trace arrivals with engine steps:
   submits every request whose arrival time has passed, then runs one
   engine step; sleeps only when the engine is idle and the next arrival
@@ -144,6 +146,52 @@ def interference_trace(
         prompt=rng.integers(0, vocab_size, long_plen).astype(np.int32),
         params=SamplingParams(temperature=temperature,
                               max_new_tokens=long_new)))
+    return arrivals
+
+
+def shared_prefix_trace(
+    vocab_size: int,
+    *,
+    num_requests: int = 8,
+    shared_prefix_len: int = 64,
+    num_prefixes: int = 2,
+    suffix_len: int = 16,
+    max_new: int = 8,
+    arrival_rate: float = 0.0,
+    seed: int = 0,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    eos_token: int = -1,
+) -> List[Arrival]:
+    """Mixture-of-K shared system prompts: every request draws one of
+    ``num_prefixes`` fixed prefix token arrays (the "system prompt" /
+    few-shot preamble) and appends a fresh random ``suffix_len``-token user
+    suffix.  This is the regime where block-level prefix caching pays:
+    after the first request with a given prefix, every sharer skips the
+    prefix's prefill entirely.
+
+    The engine left-pads prompts to the bucket size, so cached blocks only
+    match between requests with the same padded length — keep
+    ``suffix_len`` fixed (as here) for maximal sharing.  Arrivals are
+    Poisson at ``arrival_rate`` (all at t=0 when 0); same arguments, same
+    trace."""
+    rng = np.random.default_rng(seed)
+    prefixes = [
+        rng.integers(0, vocab_size, shared_prefix_len).astype(np.int32)
+        for _ in range(num_prefixes)
+    ]
+    arrivals: List[Arrival] = []
+    t = 0.0
+    for _ in range(num_requests):
+        if arrival_rate > 0:
+            t += float(rng.exponential(1.0 / arrival_rate))
+        k = int(rng.integers(0, num_prefixes))
+        suffix = rng.integers(0, vocab_size, suffix_len).astype(np.int32)
+        arrivals.append(Arrival(
+            time_s=t, prompt=np.concatenate([prefixes[k], suffix]),
+            params=SamplingParams(temperature=temperature, top_k=top_k,
+                                  eos_token=eos_token,
+                                  max_new_tokens=max_new)))
     return arrivals
 
 

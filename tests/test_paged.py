@@ -130,7 +130,8 @@ def test_pool_exhaustion_backpressure(small_model):
 
 def test_pool_too_small_for_one_request_rejected(small_model):
     cfg, params = small_model
-    with pytest.raises(AssertionError):
+    # the error is actionable: it names the flag and the computed minimum
+    with pytest.raises(ValueError, match=r"--kv-num-blocks.*>= 5"):
         ServingEngine(cfg, params, max_batch=2, max_len=64,
                       cache_layout="paged", kv_block_size=16,
                       kv_num_blocks=2)

@@ -1,0 +1,250 @@
+"""Block-level prefix caching: correctness and pool accounting.
+
+The contract: enabling the prefix cache changes *what prefill work runs*,
+never *what tokens come out*.  A request served from resident prefix
+blocks must emit the same stream as a cold request for the same seed —
+{greedy, sampled} x {chunked, unchunked} — while refcounts, eviction, and
+the free stack stay balanced.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import cache as cache_lib
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+from repro.serving.workload import shared_prefix_trace
+
+BS = 8  # kv block size used throughout: 64-token max_len -> 8 blocks/slot
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("cache_layout", "paged")
+    kw.setdefault("kv_block_size", BS)
+    return ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8, **kw)
+
+
+def _streams(cfg, params, arrivals, **kw):
+    eng = _engine(cfg, params, **kw)
+    for a in arrivals:
+        eng.submit(a.prompt, a.params)
+    finished = eng.run()
+    return eng, {r.uid: list(r.output_tokens) for r in finished}
+
+
+# -- hashing -----------------------------------------------------------------
+
+def test_hash_token_blocks_chains_and_skips_partial_tail():
+    toks = np.arange(20, dtype=np.int32)
+    hashes = cache_lib.hash_token_blocks(toks, 8)
+    assert len(hashes) == 2  # 20 tokens -> 2 full blocks, tail unhashed
+    # same prefix, same hashes; a one-token change in block 0 changes both
+    # (chained), a change in block 1 changes only hashes[1]
+    same = cache_lib.hash_token_blocks(np.arange(23, dtype=np.int32), 8)
+    assert same == hashes
+    flip0 = toks.copy(); flip0[0] += 1
+    flip1 = toks.copy(); flip1[9] += 1
+    assert cache_lib.hash_token_blocks(flip0, 8)[0] != hashes[0]
+    assert cache_lib.hash_token_blocks(flip0, 8)[1] != hashes[1]
+    assert cache_lib.hash_token_blocks(flip1, 8)[0] == hashes[0]
+    assert cache_lib.hash_token_blocks(flip1, 8)[1] != hashes[1]
+
+
+# -- stream equivalence ------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("chunk", [0, 8])
+def test_prefix_cached_streams_match_cold(small_model, chunk, temperature):
+    """Warm engines emit the cold engine's exact streams — and actually
+    hit: blocks are reused and prefill tokens skipped."""
+    cfg, params = small_model
+    arrivals = shared_prefix_trace(
+        cfg.vocab_size, num_requests=6, shared_prefix_len=24, num_prefixes=2,
+        suffix_len=8, max_new=6, temperature=temperature, top_k=8, seed=3)
+    _, base = _streams(cfg, params, arrivals, kv_num_blocks=64,
+                       prefill_chunk=chunk)
+    eng, got = _streams(cfg, params, arrivals, kv_num_blocks=64,
+                        prefill_chunk=chunk, prefix_cache=True)
+    assert got == base
+    assert eng.prefix_hits > 0
+    assert eng.prefix_blocks_reused > 0
+    assert eng.prefill_tokens_skipped > 0
+    assert eng.blocks_in_use == 0  # every live block returned at drain
+    s = eng.latency_summary()
+    assert s["prefix_hit_rate"] == eng.prefix_hits / eng.prefix_lookups
+    assert s["prefill_tokens_skipped"] == eng.prefill_tokens_skipped
+
+
+def test_warm_request_skips_exactly_the_shared_prefix(small_model):
+    """Two same-prefix requests back to back: the second reuses every full
+    prefix block (resurrected from the evictable pool after the first
+    finished) and recomputes only the suffix + partial tail."""
+    cfg, params = small_model
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+
+    eng = _engine(cfg, params, kv_num_blocks=64, prefix_cache=True)
+    for _ in range(2):
+        suffix = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        eng.submit(np.concatenate([prefix, suffix]),
+                   SamplingParams(max_new_tokens=4))
+        eng.run()
+    # plen = 32, bs = 8: full blocks cover 0..31, the lookup cap keeps the
+    # last one private, so the warm request reuses blocks 0..2 = 24 tokens
+    assert eng.prefix_hits == 1
+    assert eng.prefix_blocks_reused == 3
+    assert eng.prefill_tokens_skipped == 24
+    # the shared blocks parked back on the evictable LRU with refs == 0
+    assert eng.blocks_in_use == 0
+    assert all(r == 0 for r in eng._pool.refs.values())
+
+
+def test_cow_tail_block_never_shared(small_model):
+    """A block-aligned prompt registers all its full blocks, but the
+    lookup cap keeps an equal-length sharer from hitting the final one —
+    it recomputes the block holding its last prompt position privately
+    (first-token logits come from there), and its decode writes land in
+    the next, private block."""
+    cfg, params = small_model
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)  # 4 blocks
+    eng = _engine(cfg, params, kv_num_blocks=64, prefix_cache=True)
+    for _ in range(2):
+        eng.submit(prompt, SamplingParams(max_new_tokens=4))
+        eng.run()
+    # identical 32-token prompts: all 4 full blocks are registered, but the
+    # hit is capped at (plen-1)//bs = 3 blocks
+    assert eng.prefix_blocks_reused == 3
+    assert eng.prefill_tokens_skipped == 24
+    assert len(eng.finished) == 2
+    assert eng.finished[0].output_tokens == eng.finished[1].output_tokens
+
+
+def test_eviction_under_pool_pressure(small_model):
+    """Distinct prompts cycling through a minimal pool: cached blocks are
+    evicted LRU to satisfy new admissions, nothing leaks, and evicted
+    hashes stop matching."""
+    cfg, params = small_model
+    # minimal legal pool: one worst-case request (8 blocks) + garbage
+    eng = _engine(cfg, params, kv_num_blocks=9, prefix_cache=True)
+    rng = np.random.default_rng(13)
+    for _ in range(4):
+        eng.submit(rng.integers(0, cfg.vocab_size, 32),
+                   SamplingParams(max_new_tokens=2))
+    finished = eng.run()
+    assert len(finished) == 4
+    assert eng._pool.evictions > 0
+    assert eng.prefix_hits == 0  # all prompts distinct: no false sharing
+    assert eng.blocks_in_use == 0
+    assert len(eng._pool.free_stack) + len(eng._pool.evictable) == 8
+    # registry is consistent: every registered block maps back to its hash
+    assert all(eng._pool.block_of[h] == b
+               for b, h in eng._pool.hash_of.items())
+
+
+def test_prefix_cache_survives_concurrent_sharers(small_model):
+    """Two live requests sharing prefix blocks: refcounts reach 2, and the
+    blocks only become evictable after both finish."""
+    cfg, params = small_model
+    rng = np.random.default_rng(14)
+    prefix = rng.integers(0, cfg.vocab_size, 24).astype(np.int32)
+    eng = _engine(cfg, params, kv_num_blocks=64, prefix_cache=True,
+                  prefill_chunk=8)
+    suffix = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng.submit(np.concatenate([prefix, suffix]),
+               SamplingParams(max_new_tokens=30))
+    for _ in range(6):  # first sharer's prefix blocks land and become ready
+        eng.step()
+    suffix = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    eng.submit(np.concatenate([prefix, suffix]),
+               SamplingParams(max_new_tokens=30))
+    saw_shared = False
+    for _ in range(200):
+        if not eng.busy:
+            break
+        eng.step()
+        if any(r == 2 for r in eng._pool.refs.values()):
+            saw_shared = True
+    assert saw_shared, "prefix blocks never reached two live readers"
+    assert len(eng.finished) == 2
+    assert all(r == 0 for r in eng._pool.refs.values())
+
+
+def test_eviction_degrades_chains_from_the_tail(small_model):
+    """Freed chains park tail-first on the evictable LRU, so pool pressure
+    evicts a cached prefix from the right: a later same-prefix request
+    still hits the surviving head blocks (evicting the head would strand
+    the whole chain — lookups only match a leading run)."""
+    cfg, params = small_model
+    eng = _engine(cfg, params, kv_num_blocks=9, prefix_cache=True)
+    rng = np.random.default_rng(15)
+    prompt_a = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+    eng.submit(prompt_a, SamplingParams(max_new_tokens=2))   # registers 4
+    eng.run()
+    # a distinct request forces one eviction (needs 5, only 4 free)
+    eng.submit(rng.integers(0, cfg.vocab_size, 32),
+               SamplingParams(max_new_tokens=2))
+    eng.run()
+    assert eng._pool.evictions >= 1
+    # the same prefix again: the lookup-cap'd 3-block head must survive
+    eng.submit(prompt_a, SamplingParams(max_new_tokens=2))
+    eng.run()
+    assert eng.prefix_hits == 1
+    assert eng.prefix_blocks_reused == 3
+    assert eng.prefill_tokens_skipped == 24
+
+
+# -- gating ------------------------------------------------------------------
+
+def test_prefix_cache_requires_paged_layout(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg, params, prefix_cache=True)
+
+
+def test_prefix_cache_rejects_per_slot_state():
+    """Sliding-window (and recurrent) stacks keep per-slot cache rows a
+    skipped prefill would leave stale — the engine refuses rather than
+    serving garbage."""
+    cfg = ModelConfig(
+        name="toy-hybrid", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, d_ff=64, vocab_size=128,
+        block_pattern=("attn", "local_attn"), sliding_window=12,
+        dtype="float32", param_dtype="float32",
+    ).validate()
+    params, _ = model_lib.init(cfg, jax.random.PRNGKey(1))
+    with pytest.raises(ValueError, match="local_attn"):
+        ServingEngine(cfg, params, cache_layout="paged", prefix_cache=True)
+
+
+def test_small_pool_error_names_flag_and_minimum(small_model):
+    """An over-small pool must tell the operator which flag to turn and
+    the computed minimum, not just the block count."""
+    cfg, params = small_model
+    with pytest.raises(ValueError, match=r"--kv-num-blocks.*>= 5"):
+        ServingEngine(cfg, params, cache_layout="paged", max_len=64,
+                      kv_block_size=16, kv_num_blocks=2)
+
+
+# -- CLI ---------------------------------------------------------------------
+
+def test_serve_driver_prefix_cache():
+    from repro.launch.serve import main
+
+    assert main(["--arch", "qwen1.5-0.5b", "--smoke", "--requests", "4",
+                 "--max-new", "4", "--max-batch", "2", "--max-len", "64",
+                 "--cache-layout", "paged", "--prefix-cache",
+                 "--shared-prefix-len", "24", "--shared-prefixes", "1",
+                 "--power-reader", "none"]) == 0

@@ -247,6 +247,75 @@ def test_chunked_scheduler_invariants(seed, chunk, n):
     assert len(eng.finished) == n
 
 
+# -- prefix-cache refcount/eviction invariants under random workloads -----------
+
+@given(
+    seed=st.integers(0, 2**16),
+    chunk=st.integers(0, 12),
+    n=st.integers(3, 6),
+    pool_extra=st.integers(0, 8),
+)
+@settings(max_examples=6, deadline=None)
+def test_prefix_cache_invariants(seed, chunk, n, pool_extra):
+    """Random shared-prefix Poisson workloads x {chunked, unchunked} x pool
+    sizes: at every step the free stack, the evictable LRU, and the live
+    slot tables partition the pool (so an evicted block can never have a
+    live reader), every registered block's refcount equals its number of
+    live owners, and after the drain all refcounts balance to zero with
+    every block either free or cached-evictable."""
+    from collections import Counter
+
+    from repro.serving.engine import ServingEngine
+    from repro.serving.workload import shared_prefix_trace
+
+    cfg, params = _serve_model()
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8, cache_layout="paged",
+                        kv_block_size=8, kv_num_blocks=9 + pool_extra,
+                        prefill_chunk=chunk, prefix_cache=True, seed=seed)
+    rng = np.random.default_rng(seed)
+    arrivals = shared_prefix_trace(
+        cfg.vocab_size, num_requests=n,
+        shared_prefix_len=int(rng.integers(8, 28)), num_prefixes=2,
+        suffix_len=int(rng.integers(1, 9)),
+        max_new=int(rng.integers(1, 5)), arrival_rate=0.0, seed=seed,
+        temperature=0.7, top_k=8)
+    for a in arrivals:
+        eng.submit(a.prompt, a.params)
+
+    pool, all_blocks = eng._pool, set(range(1, eng.num_blocks))
+    for _ in range(500):
+        if not eng.busy:
+            break
+        eng.step()
+        free, evict = set(pool.free_stack), set(pool.evictable)
+        owners = Counter(b for blocks in eng._slot_blocks for b in blocks)
+        live = set(owners)
+        # free / evictable / live partition the pool: evicted-or-idle
+        # blocks never have live readers, nothing is lost or double-held
+        assert len(free) == len(pool.free_stack)  # no duplicates
+        assert not (free & evict) and not (free & live) and not (evict & live)
+        assert free | evict | live == all_blocks
+        # refcount == number of live owners for every registered block;
+        # unregistered blocks are private (exactly one owner)
+        for blk, r in pool.refs.items():
+            assert r == owners.get(blk, 0)
+        for blk, c in owners.items():
+            if blk not in pool.refs:
+                assert c == 1
+        # only registered blocks can be published as ready
+        assert pool.ready <= set(pool.hash_of)
+        assert eng.blocks_in_use == len(live)
+    assert not eng.busy, "workload failed to drain"
+    eng.flush()
+    assert len(eng.finished) == n
+    # refcounts balance to zero; every block is free or cached-evictable
+    assert eng.blocks_in_use == 0
+    assert all(r == 0 for r in pool.refs.values())
+    assert len(pool.free_stack) + len(pool.evictable) == eng.num_blocks - 1
+    assert all(not b for b in eng._slot_blocks)
+
+
 # -- checkpoint: roundtrip arbitrary nested trees -------------------------------
 
 @given(seed=st.integers(0, 2**16), depth=st.integers(1, 3))
