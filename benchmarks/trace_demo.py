@@ -26,8 +26,12 @@ def run(csv_rows: List[str]) -> str:
         s = e.trace(path, hardware="tpu-v5e", phase=phase, batch=batch,
                     seq_len=seq)
         wall = (time.perf_counter() - t0) * 1e6
+        # repo-relative in the committed RESULTS.md: the JSONs are
+        # local-only scratch (gitignored), not checked-in artifacts
+        rel = os.path.relpath(path, os.path.dirname(OUT_DIR))
         lines.append(
-            f"- `{path}`: est total {s['total_s']*1e3:.2f} ms, "
+            f"- `benchmarks/{rel}` (local harness output): "
+            f"est total {s['total_s']*1e3:.2f} ms, "
             f"gemm {s.get('gemm_s', 0)*1e3:.2f} ms, "
             f"attn {s.get('attn_s', 0)*1e3:.2f} ms, "
             f"memory-bound frac {s['memory_bound_frac']:.2f}")

@@ -27,7 +27,9 @@ from repro.core.energy import (ModelReader, PowerMonitor, ProcStatReader,
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as model_lib
 from repro.serving.engine import ServingEngine
+from repro.models import cache as cache_lib
 from repro.serving.workload import (LengthDist, OpenLoopDriver, WorkloadSpec,
+                                    bursty_trace, estimate_concurrency,
                                     poisson_trace, replay_trace,
                                     shared_prefix_trace)
 from repro.sharding import rules
@@ -80,10 +82,24 @@ def main(argv=None) -> int:
                     help="KV layout: worst-case contiguous slots or a "
                          "shared block pool with per-slot block tables")
     ap.add_argument("--kv-block-size", type=int, default=16)
-    ap.add_argument("--kv-num-blocks", type=int, default=0,
-                    help="paged pool size in blocks (0 = worst case); "
-                         "smaller pools trade admission backpressure for "
-                         "device memory")
+    ap.add_argument("--kv-num-blocks", default="0",
+                    help="paged pool size in blocks; 0 = worst case, "
+                         "'auto' = size from the workload trace (p95 "
+                         "sequence length x estimated concurrency, "
+                         "cache.suggest_num_blocks — pair with "
+                         "--preemption recompute so a bursty tail "
+                         "preempts instead of failing); smaller pools "
+                         "trade pressure handling for device memory")
+    ap.add_argument("--preemption", default="off",
+                    choices=["off", "recompute"],
+                    help="KV pool overcommit policy (paged layout only): "
+                         "'off' reserves each request's worst case at "
+                         "admission and backpressures; 'recompute' "
+                         "reserves lazily, grows per decode step, and on "
+                         "a dry pool preempts the newest in-flight "
+                         "request (never the head-of-line), re-admitting "
+                         "it later by recomputing its prompt + generated "
+                         "prefix")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: split prompt prefills into "
                          "chunks of this many tokens, interleaved with "
@@ -111,9 +127,25 @@ def main(argv=None) -> int:
                          "prefix (fixed: equal padded lengths are what "
                          "lets prefix blocks match); the --prompt-len-* "
                          "flags are ignored in shared-prefix mode")
+    ap.add_argument("--bursty", action="store_true",
+                    help="generate the bursty overcommit workload "
+                         "(waves of simultaneous arrivals) instead of "
+                         "Poisson traffic — the scenario --preemption "
+                         "recompute exists for")
+    ap.add_argument("--burst-size", type=int, default=4,
+                    help="requests per wave of the --bursty trace")
+    ap.add_argument("--burst-gap", type=float, default=0.25,
+                    help="seconds between --bursty waves")
     args = ap.parse_args(argv)
     if args.prefix_cache and args.cache_layout != "paged":
         ap.error("--prefix-cache requires --cache-layout paged")
+    if args.preemption != "off" and args.cache_layout != "paged":
+        ap.error("--preemption recompute requires --cache-layout paged")
+    if args.kv_num_blocks != "auto":
+        try:
+            args.kv_num_blocks = int(args.kv_num_blocks)
+        except ValueError:
+            ap.error("--kv-num-blocks takes an integer or 'auto'")
 
     cfg = get_config(args.arch, smoke=args.smoke)
     plo = max(int(args.prompt_len_mean // 4), 1)
@@ -136,6 +168,14 @@ def main(argv=None) -> int:
         arrivals = replay_trace(schedule, cfg.vocab_size,
                                 seed=args.seed,
                                 temperature=args.temperature, top_k=20)
+    elif args.bursty:
+        bursts = max(-(-args.requests // max(args.burst_size, 1)), 1)
+        arrivals = bursty_trace(
+            cfg.vocab_size, bursts=bursts, burst_size=args.burst_size,
+            gap_s=args.burst_gap,
+            prompt_len=max(int(args.prompt_len_mean), 1),
+            max_new=args.max_new, seed=args.seed,
+            temperature=args.temperature, top_k=20)[:args.requests]
     elif args.shared_prefix_len > 0:
         arrivals = shared_prefix_trace(
             cfg.vocab_size, num_requests=args.requests,
@@ -147,6 +187,21 @@ def main(argv=None) -> int:
     else:
         arrivals = poisson_trace(spec, cfg.vocab_size)
 
+    kv_num_blocks = args.kv_num_blocks
+    if kv_num_blocks == "auto":
+        if args.cache_layout != "paged":
+            ap.error("--kv-num-blocks auto requires --cache-layout paged")
+        seq_lens = [len(a.prompt) + a.params.max_new_tokens
+                    for a in arrivals]
+        kv_num_blocks = cache_lib.suggest_num_blocks(
+            seq_lens, args.kv_block_size, args.max_len, args.max_batch,
+            concurrency=estimate_concurrency(arrivals, args.max_batch))
+        worst = cache_lib.default_num_blocks(
+            args.max_batch, args.max_len, args.kv_block_size)
+        print(f"# --kv-num-blocks auto -> {kv_num_blocks} blocks "
+              f"(worst case {worst}); pair with --preemption recompute "
+              f"to survive a bursty tail")
+
     reader = _make_reader(args.power_reader)
     with rules.use_mesh(make_host_mesh()):
         params, _ = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
@@ -154,10 +209,11 @@ def main(argv=None) -> int:
                                max_len=args.max_len, seed=args.seed,
                                cache_layout=args.cache_layout,
                                kv_block_size=args.kv_block_size,
-                               kv_num_blocks=args.kv_num_blocks,
+                               kv_num_blocks=kv_num_blocks,
                                prefill_chunk=args.prefill_chunk,
                                prefill_budget=args.prefill_budget,
-                               prefix_cache=args.prefix_cache)
+                               prefix_cache=args.prefix_cache,
+                               preemption=args.preemption)
         driver = OpenLoopDriver(engine, arrivals)
         if reader is not None:
             monitor = PowerMonitor(reader)

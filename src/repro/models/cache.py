@@ -46,6 +46,40 @@ def default_num_blocks(batch: int, max_len: int, block_size: int) -> int:
     return batch * blocks_per_slot(max_len, block_size) + 1
 
 
+def suggest_num_blocks(
+    seq_lens, block_size: int, max_len: int, max_batch: int,
+    concurrency: int = 0, q: float = 95.0,
+) -> int:
+    """Workload-sized pool suggestion (``--kv-num-blocks auto``).
+
+    Instead of the worst case (every slot at ``max_len``), size the pool
+    for the observed load: the ``q``-th percentile of the trace's total
+    sequence lengths (prompt + decode budget, clamped to ``max_len``)
+    times the expected number of concurrently live slots, plus one slack
+    block per slot (bucketing / partial-tail rounding) and the reserved
+    garbage block.  ``concurrency`` defaults to ``max_batch`` (the
+    saturated case — exactly when pool sizing matters); pass an estimate
+    from the trace (``serving.workload.estimate_concurrency``) for lighter
+    open-loop load.
+
+    The suggestion is clamped to ``[one worst-case request + garbage,
+    worst case]``: below the floor a single long request could never
+    finish, and above the ceiling the extra blocks are unreachable.  A
+    pool sized this way can still overcommit on a bursty tail — pair it
+    with ``preemption="recompute"`` so pressure preempts instead of
+    failing.
+    """
+    lens = sorted(min(int(n), max_len) for n in seq_lens)
+    if not lens:
+        return default_num_blocks(max_batch, max_len, block_size)
+    k = max(int(-(-len(lens) * q // 100)), 1) - 1
+    p_len = lens[min(k, len(lens) - 1)]
+    slots = min(max(int(concurrency) or max_batch, 1), max_batch)
+    want = slots * (blocks_per_slot(p_len, block_size) + 1) + 1
+    floor = blocks_per_slot(max_len, block_size) + 1
+    return min(max(want, floor), default_num_blocks(max_batch, max_len, block_size))
+
+
 # -- host-side block-pool bookkeeping (paged layout) -------------------------
 
 _FNV_OFFSET = 0xCBF29CE484222325

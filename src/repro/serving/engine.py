@@ -6,9 +6,15 @@ stack, batched multi-slot admission, Sarathi-style chunked prefill, and
 block-level prefix caching (``prefix_cache=True``): full prompt blocks are
 content-hashed and shared read-only across requests through refcounts, so
 a request whose prefix is already resident skips straight to its first
-non-cached block.  Sampling is scheduling-invariant (per-request PRNG
-chains), so every layout/scheduling combination emits byte-identical token
-streams for the same seed.
+non-cached block.  With ``preemption="recompute"`` the engine stays
+correct under pool *overcommit*: blocks are reserved lazily and grown as
+decodes cross block boundaries, and when the pool runs dry the newest
+admitted request (never the head-of-line) is preempted — its private
+blocks freed, the request parked — and later re-admitted by recomputing
+its prompt + generated-so-far prefix through the chunked-prefill path.
+Sampling is scheduling-invariant (per-request PRNG chains, restored
+exactly on resume), so every layout/scheduling/preemption combination
+emits byte-identical token streams for the same seed.
 
 The full design guide — request lifecycle, pool/refcount bookkeeping, and
 the invariants the test suites hold — lives in ``docs/serving.md``.
@@ -30,8 +36,8 @@ from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
 from repro.serving.sampling import SamplingParams, sample
-from repro.serving.step import (init_slot_state, make_decode_sample_step,
-                                maybe_donate)
+from repro.serving.step import (init_slot_state, invalidate_slot,
+                                make_decode_sample_step, maybe_donate)
 
 _RING = 64  # host-side token ring buffer depth (tokens per slot per flush)
 
@@ -50,6 +56,11 @@ class Request:
     output_tokens: List[int] = dataclasses.field(default_factory=list)
     truncated: bool = False
     joules: float = 0.0
+    # preemption priority: order of *first* admission (kept across
+    # re-admissions so the oldest in-flight request — the head-of-line —
+    # is stable and can never be picked as a victim); -1 = never admitted
+    admit_seq: int = -1
+    preemptions: int = 0
     # memoized (plen, block hashes) — the prompt and its bucket never
     # change, and admission may probe a backpressured request every step
     _hash_cache: Optional[tuple] = dataclasses.field(
@@ -89,6 +100,11 @@ class _PrefillCursor:
     # prefix cache: (end position, block) pairs this cursor registered;
     # each block is marked ready once the cursor passes its end
     pending_ready: List = dataclasses.field(default_factory=list)
+    # preemption recompute: number of tokens the request had already
+    # emitted when it was preempted.  0 = a fresh admission (sample the
+    # first token from the final chunk's logits); > 0 = a resumed request
+    # (the next token is already known — re-arm the slot instead)
+    resume_n: int = 0
 
 
 class ServingEngine:
@@ -109,8 +125,24 @@ class ServingEngine:
         prefill_chunk: int = 0,
         prefill_budget: int = 0,
         prefix_cache: bool = False,
+        preemption: str = "off",
     ):
         assert cache_layout in ("contiguous", "paged"), cache_layout
+        assert preemption in ("off", "recompute"), preemption
+        if preemption != "off":
+            if cache_layout != "paged":
+                raise ValueError(
+                    "preemption requires cache_layout='paged': only a block "
+                    "pool can run dry mid-decode and reclaim a victim's "
+                    "blocks")
+            if cfg.is_encdec or cfg.num_vision_tokens:
+                raise ValueError(
+                    f"preemption='recompute' replays a request's prompt + "
+                    f"generated tokens through the chunked-prefill path; "
+                    f"{cfg.name!r} carries an encoder/vision prefix whose "
+                    f"replay length would differ from the original "
+                    f"admission")
+        self.preemption = preemption
         if prefix_cache:
             if cache_layout != "paged":
                 raise ValueError(
@@ -173,6 +205,22 @@ class ServingEngine:
         self.prefix_hits = 0
         self.prefix_blocks_reused = 0
         self.prefill_tokens_skipped = 0
+        # preemption: parked requests (sorted by admit_seq — re-admitted
+        # oldest-first, and always ahead of the waiting queue), counters,
+        # the host mirror of each decoding slot's next write position
+        # (drives decode-time block growth), and per-step pool-occupancy
+        # samples for the latency_summary percentiles
+        self._preempted: List[Request] = []
+        self._admit_seq = 0
+        self.preemptions = 0
+        self.recompute_tokens = 0
+        self._next_pos = np.zeros(max_batch, np.int64)
+        self._occ_samples: List[float] = []
+        # PRNG chain fast-forward for resume: n rides as a traced scalar,
+        # so restoring a chain is one dispatch regardless of how many
+        # tokens the parked request had emitted
+        self._advance_chain = jax.jit(lambda key, n: jax.lax.fori_loop(
+            0, n, lambda _, k: jax.random.split(k)[1], key))
 
         self.cache = model_lib.init_cache(
             cfg, max_batch, max_len, dtype, layout=cache_layout,
@@ -260,7 +308,8 @@ class ServingEngine:
 
     @property
     def busy(self) -> bool:
-        return bool(self.queue) or any(s is not None for s in self.slots)
+        return (bool(self.queue) or bool(self._preempted)
+                or any(s is not None for s in self.slots))
 
     def step(self) -> bool:
         """One admit + chunk + decode round; returns True if work was done."""
@@ -268,7 +317,11 @@ class ServingEngine:
             return False
         self._admit()
         self._advance_chunks()
+        self._grow_decode_blocks()
         self._decode_once()
+        if self.layout == "paged":
+            self._occ_samples.append(
+                self._pool.in_use / max(self.num_blocks - 1, 1))
         return True
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -301,9 +354,18 @@ class ServingEngine:
         return min(self.max_len - 1, ((n + b - 1) // b) * b)
 
     def _blocks_for(self, plen: int, max_new: int) -> int:
-        """Pool blocks reserved at admission: prompt + decode budget, so the
-        fused step's append never has to allocate."""
-        tokens = min(plen + max_new, self.max_len)
+        """Pool blocks reserved at admission.
+
+        With preemption off the full prompt + decode budget is reserved up
+        front, so the fused step's append never has to allocate — but a
+        pool smaller than the worst case then refuses load it could have
+        served (most requests stop early).  Under ``preemption=
+        "recompute"`` reservation is *lazy*: only the prompt plus the
+        first decode write position, with later blocks grown on demand by
+        ``_grow_decode_blocks`` (preempting a victim when the pool runs
+        dry)."""
+        budget = 1 if self.preemption != "off" else max_new
+        tokens = min(plen + budget, self.max_len)
         return min(cache_lib.blocks_per_slot(tokens, self.block_size),
                    self.max_blocks_per_slot)
 
@@ -354,6 +416,13 @@ class ServingEngine:
         return self._pool.peek(hashes[:self._lookup_width(plen)])
 
     def _admit(self) -> None:
+        # preempted requests re-admit first, oldest admission first; a
+        # parked head that does not fit blocks the waiting queue too —
+        # new arrivals must not starve a request that already holds
+        # emitted tokens (head-of-line progress guarantees drain)
+        while self._preempted:
+            if not self._try_readmit():
+                return
         while self.queue:
             free = [s for s in range(self.max_batch) if self.slots[s] is None]
             if not free:
@@ -386,6 +455,9 @@ class ServingEngine:
             picked_ids = {id(r) for r in picked}
             self.queue = deque(
                 r for r in self.queue if id(r) not in picked_ids)
+            for req in picked:
+                req.admit_seq = self._admit_seq
+                self._admit_seq += 1
             slots_for = free[:len(picked)]
             if self.chunk > 0:
                 self._admit_chunked(picked, slots_for, plen)
@@ -459,16 +531,19 @@ class ServingEngine:
                 tables_np[r] if self.layout == "paged" else None)
 
     def _claim_prefix_blocks(self, req: Request, slot: int, plen: int,
-                             hashes: List[int], hit: List[int]):
+                             hashes: List[int], hit: List[int],
+                             nb: Optional[int] = None):
         """Commit one admission's pool blocks: reused prefix blocks first
         (already increfed by ``lookup``), freshly allocated ones after, in
         table order.  Full prompt blocks past the hit are registered for
         future sharers (not yet ready — the caller fills them).  Returns
         ``(tables_np, start, pending)``: the slot's table row, the first
         position prefill must compute, and the (end, block) pairs to mark
-        ready as the fill passes them."""
+        ready as the fill passes them.  ``nb`` overrides the block count
+        (recompute re-admission covers prompt + generated tokens)."""
         h = len(hit)
-        nb = self._blocks_for(plen, req.params.max_new_tokens)
+        if nb is None:
+            nb = self._blocks_for(plen, req.params.max_new_tokens)
         blocks = hit + self._pool.allocate(nb - h)
         tables_np = np.zeros(self.max_blocks_per_slot, np.int32)
         tables_np[:nb] = blocks
@@ -566,8 +641,12 @@ class ServingEngine:
             if cur.next == cur.plen:  # final chunk landed: decode-eligible
                 self._prefill_order.pop(0)
                 self._cursors[slot] = None
-                self._start_decoding(cur.req, slot, cur.plen, logits,
-                                     cur.tables_np)
+                if cur.resume_n > 0:
+                    self._resume_decoding(cur.req, slot, cur.plen,
+                                          cur.resume_n, cur.tables_np)
+                else:
+                    self._start_decoding(cur.req, slot, cur.plen, logits,
+                                         cur.tables_np)
 
     def _run_chunk(self, slot: int, cur: _PrefillCursor, c: int):
         """One chunk of one slot's prompt through the jitted chunk step."""
@@ -595,6 +674,167 @@ class ServingEngine:
                 self.params, batch, start, slots, self.cache)
         return logits
 
+    # -- preemption + recompute ------------------------------------------------
+    def _grow_decode_blocks(self) -> None:
+        """Lazy block growth (``preemption="recompute"`` only): before the
+        fused step runs, every decoding slot whose next write position
+        crosses into an unallocated block gets one.  When the pool is dry
+        (free stack and evictable LRU both empty) the newest-admitted
+        in-flight request is preempted — possibly the growing slot itself
+        — and its reclaimed blocks satisfy the growth.  The head-of-line
+        (oldest ``admit_seq``) is never a victim, so it always progresses
+        and the engine is guaranteed to drain."""
+        if self.layout != "paged" or self.preemption == "off":
+            return
+        bs = self.block_size
+        for slot in range(self.max_batch):
+            req = self.slots[slot]
+            if req is None or self._cursors[slot] is not None:
+                continue
+            need = int(self._next_pos[slot]) // bs + 1
+            while len(self._slot_blocks[slot]) < need:
+                if self.slots[slot] is not req:
+                    break  # the growing slot itself was preempted
+                if self._pool.available == 0:
+                    victim = self._pick_victim()
+                    assert victim is not None, (
+                        "pool dry with no preemptible victim — the pool "
+                        "is smaller than one worst-case request")
+                    self._preempt(victim)
+                    continue
+                blk = self._pool.allocate(1)[0]
+                self._slot_blocks[slot].append(blk)
+                idx = len(self._slot_blocks[slot]) - 1
+                self._state["block_tables"] = (
+                    self._state["block_tables"].at[slot, idx].set(blk))
+            self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                          self.blocks_in_use)
+
+    def _pick_victim(self) -> Optional[int]:
+        """LIFO victim selection: the newest-admitted in-flight request,
+        never the head-of-line (the oldest)."""
+        live = [s for s in range(self.max_batch) if self.slots[s] is not None]
+        if len(live) < 2:
+            return None
+        head = min(live, key=lambda s: self.slots[s].admit_seq)
+        return max((s for s in live if s != head),
+                   key=lambda s: self.slots[s].admit_seq)
+
+    def _preempt(self, slot: int) -> None:
+        """Park one in-flight request: flush its emitted tokens, reclaim
+        its blocks (shared prefix blocks only decref — a block with other
+        live readers is never reclaimed), mask the device row, and queue
+        it for recompute re-admission."""
+        req = self.slots[slot]
+        assert req is not None
+        assert any(r is not None and r.admit_seq < req.admit_seq
+                   for r in self.slots), "head-of-line request preempted"
+        self._flush_ring(slot)
+        if self._cursors[slot] is not None:  # parked mid-prefill
+            self._cursors[slot] = None
+            self._prefill_order.remove(slot)
+        self.slots[slot] = None
+        self._state = invalidate_slot(self._state, slot,
+                                      garbage_block=cache_lib.GARBAGE_BLOCK)
+        if self._slot_blocks[slot]:
+            self._pool.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+        self.preemptions += 1
+        req.preemptions += 1
+        self._preempted.append(req)
+        self._preempted.sort(key=lambda r: r.admit_seq)
+
+    def _try_readmit(self) -> bool:
+        """Re-admit the oldest parked request if a slot and enough blocks
+        are available: its prompt plus every token generated before the
+        preemption are recomputed through the chunked-prefill path (one
+        chunk in unchunked mode), then the slot is re-armed exactly where
+        it left off.  Resident shared-prefix blocks are reused like any
+        admission, so a preempted sharer recomputes only its private
+        suffix."""
+        req = self._preempted[0]
+        free = [s for s in range(self.max_batch) if self.slots[s] is None]
+        if not free:
+            return False
+        plen = self._bucketed(len(req.prompt))
+        n = len(req.output_tokens)
+        total = plen + max(n - 1, 0)  # positions to recompute: 0..total-1
+        nb = min(cache_lib.blocks_per_slot(min(total + 1, self.max_len),
+                                           self.block_size),
+                 self.max_blocks_per_slot)
+        if nb - self._peek_hit(req, plen) > self._pool.available:
+            return False
+        self._preempted.pop(0)
+        slot = free[0]
+        toks = self._padded_prompt(req, plen)
+        if n > 1:
+            toks = np.concatenate(
+                [toks, np.asarray(req.output_tokens[:n - 1], np.int32)])
+        start = 0
+        pending: List = []
+        if self.prefix_cache:
+            hashes = self._hashes_for(req, plen)
+            hit = self._pool.lookup(hashes[:self._lookup_width(plen)])
+            self.prefix_lookups += 1
+            tables_np, start, pending = self._claim_prefix_blocks(
+                req, slot, plen, hashes, hit, nb=nb)
+        else:
+            blocks = self._pool.allocate(nb)
+            tables_np = np.zeros(self.max_blocks_per_slot, np.int32)
+            tables_np[:nb] = blocks
+            self._slot_blocks[slot] = blocks
+            self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                          self.blocks_in_use)
+        self.slots[slot] = req
+        self.recompute_tokens += total - start
+        # the slot row held another request since: clear stale positions /
+        # recurrent state before the replay scatters into it
+        self.cache = self._reset_rows(
+            self.cache, jnp.asarray([slot], jnp.int32))
+        cur = _PrefillCursor(req=req, tokens=toks, plen=total, next=start,
+                             tables_np=tables_np, pending_ready=pending,
+                             resume_n=n)
+        if self.chunk > 0:
+            self._cursors[slot] = cur
+            self._prefill_order.append(slot)
+        else:
+            logits = self._run_chunk(slot, cur, total - start)
+            for _, blk in pending:
+                self._pool.mark_ready(blk)
+            if n > 0:
+                self._resume_decoding(req, slot, total, n, tables_np)
+            else:
+                self._start_decoding(req, slot, total, logits, tables_np)
+        return True
+
+    def _resume_decoding(self, req: Request, slot: int, position: int,
+                         n: int, tables_np: Optional[np.ndarray]) -> None:
+        """Re-arm a recomputed slot exactly where the preemption cut it
+        off.  The next input token is the last one emitted before parking
+        (its K/V lands on the next fused step, like any decode write), so
+        no logits are consumed and nothing is re-sampled.  The per-slot
+        PRNG chain is restored to the same point — the chain seed split
+        once per device-emitted token (``n - 1`` of them: the first token
+        came from the host-side admission draw) — so the resumed stream
+        is byte-identical to an unpreempted run."""
+        rk = jax.random.fold_in(self._base_key, req.uid)
+        key = self._advance_chain(jax.random.fold_in(rk, 1), n - 1)
+        remaining = req.params.max_new_tokens - n
+        # a live preempted request always has budget and headroom left
+        # (finish flags are processed before preemption can run); guard
+        # anyway so a corrupt resume finishes instead of decoding forever
+        active = remaining > 0 and position < self.max_len - 1
+        self._write_slot_state(
+            slot, token=req.output_tokens[-1], position=position,
+            remaining=remaining, params=req.params, active=active, key=key)
+        if tables_np is not None:
+            self._state["block_tables"] = (
+                self._state["block_tables"].at[slot].set(
+                    jnp.asarray(tables_np)))
+        self._next_pos[slot] = position
+        if not active:
+            self._finish(slot)
+
     def _start_decoding(self, req: Request, slot: int, plen: int,
                         logits, tables_np: Optional[np.ndarray]) -> None:
         """Transition a slot to the decoding state: sample the first token
@@ -615,6 +855,7 @@ class ServingEngine:
             remaining=req.params.max_new_tokens - 1,
             params=req.params, active=not done,
             key=jax.random.fold_in(rk, 1))
+        self._next_pos[slot] = plen
         if self.layout == "paged" and tables_np is not None:
             self._state["block_tables"] = (
                 self._state["block_tables"].at[slot].set(
@@ -712,6 +953,7 @@ class ServingEngine:
             req = self.slots[slot]
             if req is None:
                 continue  # stale flag for a slot freed on the host side
+            self._next_pos[slot] += 1  # the device wrote K/V there
             n = int(self._ring_n[slot])
             self._ring[slot, n] = tokens[slot]
             self._ring_n[slot] = n + 1
@@ -739,18 +981,17 @@ class ServingEngine:
         req.finish_time = time.perf_counter()
         self.finished.append(req)
         self.slots[slot] = None
-        # state["active"] already cleared on device by the fused step for
-        # decode finishes; clear explicitly for admission-time finishes
-        self._state["active"] = self._state["active"].at[slot].set(False)
+        # mask the device row (active already cleared by the fused step for
+        # decode finishes; admission-time finishes need it explicitly) and
+        # point the paged table row at the garbage block so idle writes
+        # land in trash
+        self._state = invalidate_slot(self._state, slot,
+                                      garbage_block=cache_lib.GARBAGE_BLOCK)
         if self.layout == "paged" and self._slot_blocks[slot]:
-            # return the slot's blocks (shared blocks decref and park on
-            # the evictable LRU; private ones hit the free stack) and point
-            # its table row at the garbage block so idle writes land in trash
+            # return the slot's blocks: shared blocks decref and park on
+            # the evictable LRU; private ones hit the free stack
             self._pool.free(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
-            self._state["block_tables"] = (
-                self._state["block_tables"].at[slot].set(
-                    cache_lib.GARBAGE_BLOCK))
         self._flush_energy()
 
     # -- memory accounting -------------------------------------------------------
@@ -799,7 +1040,7 @@ class ServingEngine:
         total = sum(self._win_tokens.values())
         if total > 0 and joules > 0.0:
             by_uid = {r.uid: r for r in self.finished}
-            for s in self.slots:
+            for s in list(self.slots) + self._preempted:
                 if s is not None:
                     by_uid[s.uid] = s
             for uid, n in self._win_tokens.items():
@@ -836,6 +1077,11 @@ class ServingEngine:
                 summary[f"{name}_p{q}_ms"] = _percentile(xs, q) * 1e3
         summary["kv_bytes_peak"] = self.kv_bytes_in_use(peak=True)
         summary["kv_bytes_worst_case"] = self.kv_bytes_worst_case
+        if self.layout == "paged":
+            summary["preemptions"] = self.preemptions
+            summary["recompute_tokens"] = self.recompute_tokens
+            summary["pool_occupancy_p50"] = _percentile(self._occ_samples, 50)
+            summary["pool_occupancy_p95"] = _percentile(self._occ_samples, 95)
         if self.prefix_cache:
             summary["prefix_lookups"] = self.prefix_lookups
             summary["prefix_hit_rate"] = (

@@ -78,6 +78,28 @@ def init_slot_state(max_batch: int, seed: int = 0,
     return state
 
 
+def invalidate_slot(state: Dict[str, jax.Array], slot: int,
+                    *, garbage_block: int = 0) -> Dict[str, jax.Array]:
+    """Retire one slot's device row between steps (finish or preemption).
+
+    The fused step keeps replaying every slot at a static shape, so a
+    retired slot is not removed — it is *masked*: inactive (all cache and
+    recurrent-state writes become no-ops), zero remaining budget, and, in
+    the paged layout, the whole block-table row pointed back at the
+    reserved garbage block so the slot's frozen idle writes can never
+    land in a pool block that has been freed or handed to another
+    request.  Everything else (token, position, key) is left frozen; the
+    next occupant overwrites it when the slot is re-armed.
+    """
+    state = dict(state)
+    state["active"] = state["active"].at[slot].set(False)
+    state["remaining"] = state["remaining"].at[slot].set(0)
+    if "block_tables" in state:
+        state["block_tables"] = (
+            state["block_tables"].at[slot].set(garbage_block))
+    return state
+
+
 def maybe_donate(fn: Callable, argnums: Tuple[int, ...]) -> Callable:
     """``jax.jit`` with buffer donation where the backend supports it.
 

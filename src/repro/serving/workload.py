@@ -13,6 +13,10 @@ the wall clock (open-loop: arrival times do not depend on service times).
   A/B runs and tests.
 * ``shared_prefix_trace`` — mixture of K fixed system prompts with random
   user suffixes, the workload block-level prefix caching targets.
+* ``bursty_trace`` — same-instant arrival waves that overcommit a
+  load-sized KV pool, the workload preemption/recompute targets;
+  ``estimate_concurrency`` turns a trace into the in-flight estimate
+  ``--kv-num-blocks auto`` sizes the pool from.
 * ``OpenLoopDriver`` — interleaves trace arrivals with engine steps:
   submits every request whose arrival time has passed, then runs one
   engine step; sleeps only when the engine is idle and the next arrival
@@ -193,6 +197,68 @@ def shared_prefix_trace(
                                   eos_token=eos_token,
                                   max_new_tokens=max_new)))
     return arrivals
+
+
+def bursty_trace(
+    vocab_size: int,
+    *,
+    bursts: int = 2,
+    burst_size: int = 4,
+    gap_s: float = 0.25,
+    prompt_len: int = 48,
+    max_new: int = 32,
+    seed: int = 0,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    eos_token: int = -1,
+) -> List[Arrival]:
+    """The pool-overcommit workload: ``bursts`` waves of ``burst_size``
+    same-instant arrivals, ``gap_s`` apart.  Each wave wants more KV
+    blocks than a load-sized (non-worst-case) pool holds, so an engine
+    without preemption either backpressures the whole wave behind FCFS
+    admission or must be provisioned for the peak; with
+    ``preemption="recompute"`` the wave admits, overcommits, and the
+    newest requests are preempted/recomputed as the pool breathes.  Same
+    arguments, same trace."""
+    rng = np.random.default_rng(seed)
+    arrivals: List[Arrival] = []
+    for b in range(bursts):
+        for _ in range(burst_size):
+            prompt = rng.integers(0, vocab_size, prompt_len).astype(np.int32)
+            arrivals.append(Arrival(
+                time_s=b * gap_s, prompt=prompt,
+                params=SamplingParams(temperature=temperature, top_k=top_k,
+                                      eos_token=eos_token,
+                                      max_new_tokens=max_new)))
+    return arrivals
+
+
+def estimate_concurrency(arrivals: Sequence[Arrival], max_batch: int,
+                         q: float = 95.0) -> int:
+    """p-th percentile of the in-flight request count a trace implies,
+    for ``cache_lib.suggest_num_blocks``.
+
+    Service times are unknown before the run, so assume the engine
+    exactly sustains the offered token load: request *i* occupies a slot
+    for ``tokens_i / R`` seconds with ``R = total_tokens / trace_span``.
+    The in-flight count is sampled at every arrival instant, capped at
+    ``max_batch`` (the engine cannot exceed its slots).  A closed-loop
+    trace (zero span) saturates: every slot is assumed live."""
+    if not arrivals:
+        return 1
+    t = np.asarray([a.time_s for a in arrivals], np.float64)
+    tokens = np.asarray(
+        [len(a.prompt) + a.params.max_new_tokens for a in arrivals],
+        np.float64)
+    span = float(t.max() - t.min())
+    if span <= 0.0:
+        return max_batch
+    rate = tokens.sum() / span
+    end = t + tokens / rate
+    counts = [int(np.sum((t <= now) & (now < end))) for now in t]
+    counts = sorted(min(c, max_batch) for c in counts)
+    k = max(int(-(-len(counts) * q // 100)), 1) - 1
+    return max(counts[min(k, len(counts) - 1)], 1)
 
 
 class OpenLoopDriver:

@@ -1,0 +1,253 @@
+"""KV pool overcommit: preemption + recompute correctness.
+
+The contract mirrors the other scheduler suites: overcommitting the pool
+changes *when* work happens (requests are preempted, parked, and their
+prefixes recomputed), never *what* comes out.  With the pool capped at
+~50% of the worst case on a colliding workload, every request must still
+complete and every token stream must be byte-identical to the
+uncontended run — {greedy, sampled} x {chunked, unchunked}, against both
+the contiguous layout (which cannot overcommit) and the full-pool paged
+layout.  The scheduler invariants ride along: the head-of-line is never
+preempted, shared prefix blocks are never reclaimed while referenced,
+and the pool drains balanced.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import cache as cache_lib
+from repro.models import model as model_lib
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+from repro.serving.workload import (bursty_trace, estimate_concurrency,
+                                    shared_prefix_trace)
+
+BS = 8          # kv block size: max_len=64 -> 8 blocks per worst-case slot
+HALF_POOL = 9   # ~50% of the 2-slot worst case (17), and the legal minimum
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("cache_layout", "paged")
+    kw.setdefault("kv_block_size", BS)
+    return ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8, **kw)
+
+
+def _colliding_prompts(cfg, n=6, plen=24, seed=0):
+    """24-token prompts reserve 4 of 8 allocatable blocks each under lazy
+    reservation, so two admit concurrently and their decode growth (past
+    position 32) collides on the half-sized pool."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+            for _ in range(n)]
+
+
+def _streams(cfg, params, prompts, params_s, **kw):
+    eng = _engine(cfg, params, **kw)
+    for p in prompts:
+        eng.submit(p, params_s)
+    eng.run()
+    return eng, {r.uid: list(r.output_tokens) for r in eng.finished}
+
+
+# -- stream equivalence under overcommit -------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("chunk", [0, 8])
+def test_overcommit_streams_match_uncontended(small_model, chunk, temperature):
+    """Half-sized pool + preemption: all requests complete with streams
+    byte-identical to the contiguous AND the full-pool paged runs, and
+    preemptions actually happened (the scenario is not vacuous)."""
+    cfg, params = small_model
+    prompts = _colliding_prompts(cfg)
+    sp = SamplingParams(temperature=temperature, top_k=8, max_new_tokens=16)
+    _, contig = _streams(cfg, params, prompts, sp,
+                         cache_layout="contiguous", prefill_chunk=chunk)
+    _, paged = _streams(cfg, params, prompts, sp, prefill_chunk=chunk)
+    eng, over = _streams(cfg, params, prompts, sp, prefill_chunk=chunk,
+                         kv_num_blocks=HALF_POOL, preemption="recompute")
+    assert over == contig
+    assert over == paged
+    assert len(over) == len(prompts)
+    assert eng.preemptions > 0
+    assert eng.recompute_tokens > 0
+    assert eng.blocks_in_use == 0  # pool drained balanced
+    s = eng.latency_summary()
+    assert s["preemptions"] == eng.preemptions
+    assert s["recompute_tokens"] == eng.recompute_tokens
+    assert 0.0 < s["pool_occupancy_p50"] <= s["pool_occupancy_p95"] <= 1.0
+
+
+def test_preemption_with_prefix_cache_keeps_shared_blocks(small_model):
+    """Overcommit on a shared-prefix workload: streams still match the
+    uncontended prefix-cached run, sharers still hit, and refcounts
+    balance — preemption decrefs shared blocks instead of reclaiming
+    them from under a live reader (the pool asserts on that)."""
+    cfg, params = small_model
+    arrivals = shared_prefix_trace(
+        cfg.vocab_size, num_requests=6, shared_prefix_len=16,
+        num_prefixes=1, suffix_len=8, max_new=16, temperature=0.7,
+        top_k=8, seed=3)
+    prompts = [a.prompt for a in arrivals]
+    sp = arrivals[0].params
+    _, base = _streams(cfg, params, prompts, sp, prefill_chunk=8,
+                       kv_num_blocks=64, prefix_cache=True)
+    eng, over = _streams(cfg, params, prompts, sp, prefill_chunk=8,
+                         kv_num_blocks=HALF_POOL, prefix_cache=True,
+                         preemption="recompute")
+    assert over == base
+    assert eng.preemptions > 0
+    assert eng.prefix_hits > 0
+    assert eng.blocks_in_use == 0
+    assert all(r == 0 for r in eng._pool.refs.values())
+
+
+def test_preempted_mid_prefill_restarts_cold(small_model):
+    """A victim parked before its first token re-admits like a fresh
+    request (nothing emitted, nothing to resume) and still matches."""
+    cfg, params = small_model
+    prompts = _colliding_prompts(cfg, n=4, plen=24)
+    sp = SamplingParams(temperature=0.7, top_k=8, max_new_tokens=16)
+    # chunk=1 keeps cursors open for many steps, so growth-driven
+    # preemption can catch a slot mid-prefill
+    _, base = _streams(cfg, params, prompts, sp, prefill_chunk=1)
+    eng, over = _streams(cfg, params, prompts, sp, prefill_chunk=1,
+                         kv_num_blocks=HALF_POOL, preemption="recompute")
+    assert over == base
+    assert len(over) == len(prompts)
+    assert eng.preemptions > 0
+
+
+# -- scheduler invariants ----------------------------------------------------
+
+def test_head_of_line_never_preempted(small_model):
+    """Victims are LIFO by admission order and the oldest in-flight
+    request is exempt — the progress guarantee that makes the engine
+    drain under any overcommit."""
+    cfg, params = small_model
+
+    victims = []
+
+    class Spy(ServingEngine):
+        def _preempt(self, slot):
+            live = [r.admit_seq for r in self.slots if r is not None]
+            victims.append((self.slots[slot].admit_seq, sorted(live)))
+            super()._preempt(slot)
+
+    eng = Spy(cfg, params, max_batch=2, max_len=64, prompt_bucket=8,
+              cache_layout="paged", kv_block_size=BS,
+              kv_num_blocks=HALF_POOL, preemption="recompute")
+    for p in _colliding_prompts(cfg):
+        eng.submit(p, SamplingParams(max_new_tokens=16))
+    eng.run()
+    assert victims, "overcommit scenario never preempted"
+    for seq, live in victims:
+        assert seq == max(live), "victim was not the newest admitted"
+        assert seq != min(live), "head-of-line request preempted"
+    assert len(eng.finished) == 6
+
+
+def test_preempted_requests_block_new_admissions(small_model):
+    """A parked request re-admits ahead of the waiting queue — queue
+    admissions only ever run with the preempted queue empty, so new
+    arrivals cannot starve a request that already emitted tokens."""
+    cfg, params = small_model
+    parked_seen = []
+
+    class Spy(ServingEngine):
+        def _admit_batch(self, reqs, slots_for, plen):
+            assert not self._preempted, (
+                "queue admission bypassed parked requests")
+            super()._admit_batch(reqs, slots_for, plen)
+
+        def _try_readmit(self):
+            parked_seen.append(len(self._preempted))
+            return super()._try_readmit()
+
+    eng = Spy(cfg, params, max_batch=2, max_len=64, prompt_bucket=8,
+              cache_layout="paged", kv_block_size=BS,
+              kv_num_blocks=HALF_POOL, preemption="recompute")
+    for p in _colliding_prompts(cfg, n=8):
+        eng.submit(p, SamplingParams(max_new_tokens=16))
+    eng.run()
+    assert parked_seen, "no request was ever parked"
+    assert len(eng.finished) == 8
+    # every request finished despite the churn
+    assert sorted(r.uid for r in eng.finished) == list(range(8))
+
+
+# -- auto sizing -------------------------------------------------------------
+
+def test_suggest_num_blocks_sizes_from_p95():
+    # 20 sequences of 40 tokens: p95 = 40 -> 5 blocks + 1 slack per slot,
+    # 2 slots + garbage = 13; well under the worst case (2*8+1 = 17)
+    n = cache_lib.suggest_num_blocks([40] * 20, 8, 64, 2)
+    assert n == 2 * (5 + 1) + 1
+    # clamps: tiny workload never drops below one worst-case request +
+    # garbage; a huge one never exceeds the worst-case default
+    assert cache_lib.suggest_num_blocks([8], 8, 64, 2) == 9
+    assert cache_lib.suggest_num_blocks([10_000] * 4, 8, 64, 2) == 17
+    # empty trace falls back to the worst case
+    assert cache_lib.suggest_num_blocks([], 8, 64, 2) == 17
+    # lighter estimated concurrency shrinks the suggestion
+    assert (cache_lib.suggest_num_blocks([40] * 20, 8, 64, 4, concurrency=1)
+            < cache_lib.suggest_num_blocks([40] * 20, 8, 64, 4))
+
+
+def test_estimate_concurrency_from_trace():
+    vocab = 128
+    burst = bursty_trace(vocab, bursts=1, burst_size=6, prompt_len=16,
+                         max_new=8)
+    assert estimate_concurrency(burst, max_batch=4) == 4  # closed loop
+    spread = bursty_trace(vocab, bursts=6, burst_size=1, gap_s=100.0,
+                          prompt_len=16, max_new=8)
+    assert estimate_concurrency(spread, max_batch=4) == 1  # no overlap
+    assert estimate_concurrency([], max_batch=4) == 1
+
+
+def test_auto_sized_pool_plus_preemption_completes(small_model):
+    """The intended pairing end to end: an auto-sized (sub-worst-case)
+    pool survives a bursty trace via preemption and matches the
+    uncontended streams."""
+    cfg, params = small_model
+    arrivals = bursty_trace(cfg.vocab_size, bursts=2, burst_size=3,
+                            prompt_len=24, max_new=16, seed=1)
+    prompts = [a.prompt for a in arrivals]
+    sp = arrivals[0].params
+    seq_lens = [len(p) + sp.max_new_tokens for p in prompts]
+    n = cache_lib.suggest_num_blocks(
+        seq_lens, BS, 64, 2, concurrency=estimate_concurrency(arrivals, 2))
+    assert n < cache_lib.default_num_blocks(2, 64, BS)
+    _, base = _streams(cfg, params, prompts, sp)
+    eng, got = _streams(cfg, params, prompts, sp, kv_num_blocks=n,
+                        preemption="recompute")
+    assert got == base
+    assert len(got) == len(prompts)
+
+
+# -- gating + CLI ------------------------------------------------------------
+
+def test_preemption_requires_paged_layout(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg, params, preemption="recompute")
+
+
+def test_serve_cli_auto_blocks_and_preemption():
+    from repro.launch.serve import main
+
+    assert main(["--arch", "qwen1.5-0.5b", "--smoke", "--requests", "6",
+                 "--max-new", "16", "--max-batch", "2", "--max-len", "64",
+                 "--cache-layout", "paged", "--kv-block-size", "8",
+                 "--kv-num-blocks", "auto", "--preemption", "recompute",
+                 "--bursty", "--burst-size", "3", "--prompt-len-mean", "24",
+                 "--power-reader", "none"]) == 0
