@@ -19,6 +19,14 @@ DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
 
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _BASH_BLOCK = re.compile(r"```bash\n(.*?)```", re.S)
+_FLAG = re.compile(r"(?<![\w-])--[a-z][a-z0-9-]*")
+
+# snippet-flag allowlist: fenced bash lines invoking these modules have
+# every --flag checked against the module's live --help output (flags are
+# what rot right after entry-point names).  Modules with subcommands
+# (repro.cli) are exempt — their top-level --help doesn't list subcommand
+# flags.
+_FLAG_CHECKED_MODULES = ("repro.launch.serve", "benchmarks.run")
 
 
 def _help_commands():
@@ -39,7 +47,8 @@ def test_docs_exist_and_cross_link():
     assert DOC_FILES, "no docs found"
     readme = (ROOT / "README.md").read_text()
     assert "docs/serving.md" in readme and "docs/benchmarks.md" in readme
-    for name in ("serving.md", "benchmarks.md"):
+    assert "docs/tuning.md" in readme
+    for name in ("serving.md", "benchmarks.md", "tuning.md"):
         assert "README.md" in (ROOT / "docs" / name).read_text(), (
             f"docs/{name} does not link back to README.md")
 
@@ -61,6 +70,46 @@ def test_docs_have_runnable_help_snippets():
     """The docs advertise at least one runnable --help entry point (the
     thing the CI docs job exists to keep working)."""
     assert _help_commands()
+
+
+def _doc_flags():
+    """(doc, module, flag) per --flag used in a fenced bash snippet that
+    invokes an allowlisted module."""
+    out = []
+    for path in DOC_FILES:
+        for block in _BASH_BLOCK.findall(path.read_text()):
+            # snippets wrap with backslash-newline; rejoin before parsing
+            for line in block.replace("\\\n", " ").splitlines():
+                for mod in _FLAG_CHECKED_MODULES:
+                    if f"-m {mod}" in line:
+                        out.extend((path.name, mod, flag)
+                                   for flag in _FLAG.findall(line))
+    return out
+
+
+def _module_help(mod):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(ROOT / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(f"python -m {mod} --help", shell=True, cwd=ROOT,
+                          env=env, capture_output=True, text=True,
+                          timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return proc.stdout
+
+
+def test_doc_snippet_flags_are_registered():
+    """Every --flag a doc snippet passes to an allowlisted entry point
+    exists in that entry point's --help (catches flags renamed or removed
+    after the docs were written — e.g. --kv-num-blocks, --preemption,
+    --bursty)."""
+    flags = _doc_flags()
+    assert flags, "no allowlisted snippet flags found in the docs"
+    helps = {mod: _module_help(mod)
+             for mod in {m for _, m, _ in flags}}
+    missing = [(doc, mod, flag) for doc, mod, flag in flags
+               if flag != "--help" and flag not in helps[mod]]
+    assert not missing, f"doc flags unknown to their entry point: {missing}"
 
 
 @pytest.mark.parametrize(
