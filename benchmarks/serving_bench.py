@@ -360,6 +360,76 @@ def _overcommit_section(cfg, params, csv_rows: List[str]) -> str:
             f"blocks, preemption + recompute\n\n{md}")
 
 
+def _mixed_batch_section(cfg, params, csv_rows: List[str]) -> str:
+    """Mixed prefill/decode batch row: engine steps/sec and p95 TPOT under
+    sustained prompt admission, unified single-dispatch step vs the
+    per-chunk dispatch path.  Greedy streams must match, and the unified
+    step must clear >= 1.3x steps/sec — the win is pure dispatch economics
+    (>= 2 launches per step collapse into one fused launch while cursors
+    are in flight).
+
+    Each engine serves the trace twice — the first pass warms the jit
+    caches (the unified path compiles one packed-frontier executable, the
+    legacy path one per chunk width), the second is timed.
+
+    Shape: a multi-quantum budget (budget = 8 x chunk) makes the legacy
+    path pay ~9 launches per step while the unified engine folds the same
+    frontier into a single packed dispatch."""
+    max_batch, max_len, plen, max_new = 2, 128, 100, 4
+    chunk, budget = 4, 32
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+               for _ in range(12)]
+
+    def serve(unified):
+        eng = ServingEngine(cfg, params, max_batch=max_batch,
+                            max_len=max_len, prompt_bucket=16,
+                            prefill_chunk=chunk, prefill_budget=budget,
+                            unified_step=unified)
+        results = []
+        for _ in range(2):  # warm pass, then the timed pass
+            start = len(eng.finished)
+            steps0, disp0 = eng._steps_done, eng._dispatches
+            for p in prompts:
+                eng.submit(p, SamplingParams(max_new_tokens=max_new))
+            t0 = time.perf_counter()
+            eng.run()
+            dt = time.perf_counter() - t0
+            done = sorted(eng.finished[start:], key=lambda r: r.uid)
+            nsteps = eng._steps_done - steps0
+            results.append((
+                [list(r.output_tokens) for r in done],
+                nsteps / dt,
+                _percentile([r.tpot_s for r in done], 95),
+                (eng._dispatches - disp0) / max(nsteps, 1)))
+        assert len(results[-1][0]) == len(prompts)
+        return results[-1]
+
+    uni_streams, uni_sps, uni_tpot, uni_dps = serve(True)
+    leg_streams, leg_sps, leg_tpot, leg_dps = serve(False)
+    assert uni_streams == leg_streams, (
+        "unified step changed greedy token streams")
+    ratio = uni_sps / max(leg_sps, 1e-9)
+    assert ratio >= 1.3, (
+        f"unified mixed step too slow: {uni_sps:.1f} steps/s vs per-chunk "
+        f"{leg_sps:.1f} ({ratio:.2f}x, gated >= 1.3x)")
+    csv_rows.append(
+        f"serving_unified_step,{1e6 / uni_sps:.1f},"
+        f"x{ratio:.2f}_vs_per_chunk")
+    md = report.to_markdown([{
+        "scenario": f"12 reqs, {plen}-token prompts (chunk={chunk}, "
+                    f"budget={budget}), max_new={max_new}",
+        "per-chunk steps/s": f"{leg_sps:.1f}",
+        "unified steps/s": f"{uni_sps:.1f}",
+        "speedup": f"{ratio:.2f}x (gated >= 1.3x)",
+        "per-chunk p95 TPOT": f"{leg_tpot * 1e3:.2f} ms",
+        "unified p95 TPOT": f"{uni_tpot * 1e3:.2f} ms",
+        "dispatches/step": f"{uni_dps:.2f} vs {leg_dps:.2f}",
+    }])
+    return ("## Unified mixed prefill/decode step: one dispatch per engine "
+            f"step vs per-chunk dispatches\n\n{md}")
+
+
 def run(csv_rows: List[str]) -> str:
     cfg = get_config(ARCH, smoke=True)
     params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
@@ -418,6 +488,7 @@ def run(csv_rows: List[str]) -> str:
                f"(contiguous / donated / paged)\n\n{md}")
     return (section
             + "\n\n" + _engine_kv_section(cfg, params, csv_rows)
+            + "\n\n" + _mixed_batch_section(cfg, params, csv_rows)
             + "\n\n" + _interference_section(cfg, params, csv_rows)
             + "\n\n" + _prefix_ttft_section(cfg, params, csv_rows)
             + "\n\n" + _overcommit_section(cfg, params, csv_rows))

@@ -63,6 +63,23 @@ def serving_summary_rows(summary: Dict) -> List[Dict]:
     return rows
 
 
+def serving_throughput_rows(summary: Dict) -> List[Dict]:
+    """Engine-step economics: how much work each step moved and how many
+    device dispatches it took (the unified mixed step targets <= 2)."""
+    rows = []
+    for key, label in (("tokens_per_sec", "tokens/s"),
+                       ("steps_per_sec", "steps/s")):
+        if key in summary:
+            rows.append({"Metric": label,
+                         "value": round(summary[key], 2)})
+    if "dispatches_per_step_p50" in summary:
+        rows.append({"Metric": "dispatches/step p50",
+                     "value": round(summary["dispatches_per_step_p50"], 2)})
+        rows.append({"Metric": "dispatches/step p95",
+                     "value": round(summary["dispatches_per_step_p95"], 2)})
+    return rows
+
+
 def serving_request_rows(requests) -> List[Dict]:
     """Per-request table: latency + attributed energy (paper §2.4)."""
     rows = []

@@ -127,6 +127,19 @@ def main(argv=None) -> int:
                          "prefix (fixed: equal padded lengths are what "
                          "lets prefix blocks match); the --prompt-len-* "
                          "flags are ignored in shared-prefix mode")
+    ap.add_argument("--unified-step", default="on", choices=["on", "off"],
+                    help="fuse the packed chunked-prefill frontier and the "
+                         "decode+sample step into ONE device dispatch per "
+                         "engine step (needs --prefill-chunk > 0; 'off' "
+                         "dispatches one chunk per cursor plus a decode "
+                         "step — the pre-fusion path, kept for A/B runs)")
+    ap.add_argument("--pad-side", default="left", choices=["left", "right"],
+                    help="prompt-bucket padding side: 'right' keeps content "
+                         "at the row start so variable-length suffixes of a "
+                         "shared prefix land on the same cached block "
+                         "boundaries (better --prefix-cache hit rates; "
+                         "token streams differ from 'left' because RoPE "
+                         "positions shift)")
     ap.add_argument("--bursty", action="store_true",
                     help="generate the bursty overcommit workload "
                          "(waves of simultaneous arrivals) instead of "
@@ -213,7 +226,9 @@ def main(argv=None) -> int:
                                prefill_chunk=args.prefill_chunk,
                                prefill_budget=args.prefill_budget,
                                prefix_cache=args.prefix_cache,
-                               preemption=args.preemption)
+                               preemption=args.preemption,
+                               unified_step=args.unified_step == "on",
+                               pad_side=args.pad_side)
         driver = OpenLoopDriver(engine, arrivals)
         if reader is not None:
             monitor = PowerMonitor(reader)
@@ -227,6 +242,10 @@ def main(argv=None) -> int:
         print(json.dumps(summary, indent=2))
         print("\n## Latency percentiles\n")
         print(report.to_markdown(report.serving_summary_rows(summary)))
+        throughput = report.serving_throughput_rows(summary)
+        if throughput:
+            print("\n## Step economics\n")
+            print(report.to_markdown(throughput))
         print("\n## Per-request (energy attributed per token window)\n")
         print(report.to_markdown(report.serving_request_rows(
             sorted(finished, key=lambda r: r.uid))))

@@ -161,6 +161,7 @@ def apply_attention_prefill_chunk(
     *,
     window: int = 0,
     block_tables: Optional[jax.Array] = None,
+    valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Chunked prefill: the chunk attends to every cached chunk 0..N-1 plus
     itself (causally), then its K/V is appended for chunks N+1.. and decode.
@@ -169,6 +170,12 @@ def apply_attention_prefill_chunk(
     chunk longer than a sliding window still sees its own early keys (the
     ring would evict them during the append).  Paged caches append first
     and attend over the gathered pool, where index == absolute position.
+
+    ``valid`` (B, C) bool marks each row's real tokens when ragged per-slot
+    chunks are packed into one static-width batch (the unified mixed step):
+    pad columns write nothing (paged: routed to the garbage block, whose
+    logical positions are acausal; contiguous: key positions forced to -1)
+    and their query outputs are garbage the caller discards.
     """
     q = _project_q(p, x, cfg)
     k_new, v_new = _project_kv(p, x, cfg)
@@ -176,7 +183,7 @@ def apply_attention_prefill_chunk(
     k_new = apply_rope(k_new, positions, cfg.rope_theta)
     if "kp" in kv_cache:
         kv_cache = cache_lib.append_paged_cache(
-            kv_cache, k_new, v_new, positions, block_tables)
+            kv_cache, k_new, v_new, positions, block_tables, valid)
         k_all, v_all, k_pos = cache_lib.gather_paged_kv(kv_cache, block_tables)
         o = dispatch.flash_attention(
             q, k_all, v_all, q_positions=positions, k_positions=k_pos,
@@ -185,12 +192,14 @@ def apply_attention_prefill_chunk(
         return _out_proj(p, o), kv_cache
     k_all = jnp.concatenate([kv_cache["k"].astype(k_new.dtype), k_new], axis=1)
     v_all = jnp.concatenate([kv_cache["v"].astype(v_new.dtype), v_new], axis=1)
-    k_pos = jnp.concatenate([kv_cache["pos"], positions], axis=1)
+    chunk_pos = positions if valid is None else jnp.where(valid, positions, -1)
+    k_pos = jnp.concatenate([kv_cache["pos"], chunk_pos], axis=1)
     o = dispatch.flash_attention(
         q, k_all, v_all, q_positions=positions, k_positions=k_pos,
         causal=True, window=window, softcap=cfg.logit_softcap,
     )
-    kv_cache = cache_lib.append_attn_cache(kv_cache, k_new, v_new, positions)
+    kv_cache = cache_lib.append_attn_cache(kv_cache, k_new, v_new, positions,
+                                           valid)
     return _out_proj(p, o), kv_cache
 
 

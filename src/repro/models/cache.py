@@ -139,6 +139,14 @@ class BlockPool:
         self.ready: set = set()               # registered blocks fully written
         self.evictable: "OrderedDict[int, None]" = OrderedDict()  # LRU
         self.evictions = 0
+        # per-prefix-hash counters for tuning the evictable LRU:
+        # hash -> [hits, misses, evictions].  A hit/miss is attributed by
+        # ``lookup`` (``peek`` is a budget probe and never counts); an
+        # eviction is attributed to the evicted block's hash.
+        self.prefix_stats: Dict[int, List[int]] = {}
+
+    def _stat(self, h: int) -> List[int]:
+        return self.prefix_stats.setdefault(h, [0, 0, 0])
 
     @property
     def available(self) -> int:
@@ -166,6 +174,9 @@ class BlockPool:
         blk, _ = self.evictable.popitem(last=False)
         # an evictable block by construction has no live readers
         assert self.refs.get(blk, 0) == 0, f"evicting live block {blk}"
+        h = self.hash_of.get(blk)
+        if h is not None:
+            self._stat(h)[2] += 1
         self._unregister(blk)
         self.evictions += 1
         return blk
@@ -215,10 +226,12 @@ class BlockPool:
         for h in hashes:
             blk = self.block_of.get(h)
             if blk is None or blk not in self.ready:
+                self._stat(h)[1] += 1  # first break ends the usable prefix
                 break
             if self.refs[blk] == 0:
                 del self.evictable[blk]  # resurrected before eviction
             self.refs[blk] += 1
+            self._stat(h)[0] += 1
             out.append(blk)
         return out
 
@@ -316,24 +329,56 @@ def update_attn_cache(cache: Dict, k_new: jax.Array, v_new: jax.Array,
 
 
 def append_attn_cache(cache: Dict, k: jax.Array, v: jax.Array,
-                      positions: jax.Array) -> Dict:
+                      positions: jax.Array,
+                      valid: jax.Array = None) -> Dict:
     """Write a prompt chunk's K/V (B, C, H, D) at absolute ``positions``
     (B, C) into a contiguous or ring cache, preserving existing entries.
 
     Unlike ``fill_attn_cache`` (whole-prompt, fresh cache) this scatters
     only the chunk's own C columns, so chunk N lands next to chunks
     0..N-1.  A chunk longer than a ring keeps its tail (earlier chunk
-    positions would be evicted immediately anyway)."""
+    positions would be evicted immediately anyway).
+
+    ``valid`` (B, C) bool, when given, turns masked-off entries into no-op
+    writes (the current cache content is written back) — the unified
+    mixed-batch step packs ragged per-slot chunks into one static-width
+    batch, and pad columns must not clobber live entries."""
     B, C = k.shape[:2]
     L = cache["k"].shape[1]
-    if C > L:  # ring shorter than the chunk: only the tail survives
+    if C > L and valid is None:
+        # ring shorter than the chunk: only the tail survives
         k, v, positions = k[:, C - L:], v[:, C - L:], positions[:, C - L:]
+        C = L
+    elif C > L:
+        # ragged rows: keep each row's last <= L *valid* entries (a static
+        # tail slice would drop live entries of rows shorter than C).
+        # Chunk positions are consecutive within a row, so recomputing
+        # them arithmetically keeps the gathered window's slots distinct
+        # even where the gather index saturates at C - 1 (those entries
+        # are masked invalid and write back the old cache values).
+        n = valid.sum(axis=1, dtype=jnp.int32)            # (B,)
+        base = jnp.maximum(n - L, 0)                      # window start
+        idx = base[:, None] + jnp.arange(L, dtype=jnp.int32)[None]
+        gat = jnp.minimum(idx, C - 1)[..., None, None]
+        k = jnp.take_along_axis(k, gat, axis=1)
+        v = jnp.take_along_axis(v, gat, axis=1)
+        positions = positions[:, :1] + idx
+        valid = idx < n[:, None]
         C = L
     rows = jnp.arange(B)[:, None]
     slots = positions % L
+    k = k.astype(cache["k"].dtype)
+    v = v.astype(cache["v"].dtype)
+    if valid is not None:
+        # within a row the C slots are distinct (consecutive positions mod
+        # L with C <= L), so write-back of the old value is a sound no-op
+        m = valid[..., None, None]
+        k = jnp.where(m, k, cache["k"][rows, slots])
+        v = jnp.where(m, v, cache["v"][rows, slots])
+        positions = jnp.where(valid, positions, cache["pos"][rows, slots])
     return {
-        "k": cache["k"].at[rows, slots].set(k.astype(cache["k"].dtype)),
-        "v": cache["v"].at[rows, slots].set(v.astype(cache["v"].dtype)),
+        "k": cache["k"].at[rows, slots].set(k),
+        "v": cache["v"].at[rows, slots].set(v),
         "pos": cache["pos"].at[rows, slots].set(positions),
         "ring": cache["ring"],
     }
@@ -404,7 +449,7 @@ def update_paged_cache(
 
 def append_paged_cache(
     cache: Dict, k: jax.Array, v: jax.Array, positions: jax.Array,
-    block_tables: jax.Array,
+    block_tables: jax.Array, valid: jax.Array = None,
 ) -> Dict:
     """Scatter a prompt chunk's K/V (B, C, H, D) at absolute ``positions``
     (B, C) into pool blocks through the block tables.
@@ -412,9 +457,20 @@ def append_paged_cache(
     Unlike ``fill_paged_cache`` (whole prompt, block-aligned from position
     0) the chunk may start and end anywhere inside a block, so each token
     is routed individually: position ``p`` lands at
-    ``pool[table[b, p // bs], p % bs]``."""
+    ``pool[table[b, p // bs], p % bs]``.
+
+    ``valid`` (B, C) bool, when given, routes masked-off entries to the
+    garbage block: the unified mixed-batch step packs ragged per-slot
+    chunks into one static-width batch, and a pad column's position may
+    exceed the row's allocation (or the whole row may be idle)."""
     bs = cache["kp"].shape[1]
-    blk = jnp.take_along_axis(block_tables, positions // bs, axis=1)  # (B, C)
+    idx = positions // bs
+    if valid is not None:
+        # pad positions can run past the table width; clamp before gather
+        idx = jnp.clip(idx, 0, block_tables.shape[1] - 1)
+    blk = jnp.take_along_axis(block_tables, idx, axis=1)  # (B, C)
+    if valid is not None:
+        blk = jnp.where(valid, blk, GARBAGE_BLOCK)
     off = positions % bs
     kp = cache["kp"].at[blk, off].set(k.astype(cache["kp"].dtype))
     vp = cache["vp"].at[blk, off].set(v.astype(cache["vp"].dtype))

@@ -162,6 +162,7 @@ def _apply_block_seq(
     fill_cache: bool,
     block_tables: Optional[jax.Array] = None,
     chunked: bool = False,
+    chunk_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full-sequence block (train / prefill / encoder).
 
@@ -169,18 +170,28 @@ def _apply_block_seq(
     (attend over the cache + the chunk instead of a self-contained prompt);
     recurrent and conv blocks already resume from the state carried in
     ``cache_entry``, so they need no chunk-specific handling.
+
+    ``chunk_valid`` (B, S) bool marks per-row valid prefixes when ragged
+    chunks are packed into one static-width batch (unified mixed step):
+    attention masks pad keys and cache writes, recurrent/conv states take
+    identity steps at pads.
     """
     new_entry: Optional[Dict] = None
     if kind in ("attn", "local_attn"):
         window = cfg.sliding_window if kind == "local_attn" else 0
         h = apply_norm(p["norm1"], x, cfg.norm_eps)
         if fill_cache:
-            attn_fn = (attn_lib.apply_attention_prefill_chunk if chunked
-                       else attn_lib.apply_attention_prefill)
-            a, self_cache = attn_fn(
-                p["attn"], h, cfg, positions, cache_entry["self"],
-                window=window, block_tables=block_tables
-            )
+            if chunked:
+                a, self_cache = attn_lib.apply_attention_prefill_chunk(
+                    p["attn"], h, cfg, positions, cache_entry["self"],
+                    window=window, block_tables=block_tables,
+                    valid=chunk_valid,
+                )
+            else:
+                a, self_cache = attn_lib.apply_attention_prefill(
+                    p["attn"], h, cfg, positions, cache_entry["self"],
+                    window=window, block_tables=block_tables
+                )
             new_entry = {"self": self_cache}
         else:
             a = attn_lib.apply_attention_train(
@@ -210,7 +221,8 @@ def _apply_block_seq(
     if kind == "rglru":
         h = apply_norm(p["norm1"], x, cfg.norm_eps)
         y, st = rec_lib.apply_rglru_seq(
-            p["rec"], h, cfg, cache_entry if fill_cache else None
+            p["rec"], h, cfg, cache_entry if fill_cache else None,
+            valid=chunk_valid if fill_cache else None,
         )
         x = x + y
         h = apply_norm(p["norm2"], x, cfg.norm_eps)
@@ -220,7 +232,8 @@ def _apply_block_seq(
     if kind in ("mlstm", "slstm"):
         h = apply_norm(p["norm"], x, cfg.norm_eps)
         fn = rec_lib.apply_mlstm_seq if kind == "mlstm" else rec_lib.apply_slstm_seq
-        y, st = fn(p["cell"], h, cfg, cache_entry if fill_cache else None)
+        y, st = fn(p["cell"], h, cfg, cache_entry if fill_cache else None,
+                   valid=chunk_valid if fill_cache else None)
         return x + y, (st if fill_cache else None)
 
     raise ValueError(kind)
@@ -315,6 +328,7 @@ def _apply_stack_seq(
     remat: bool,
     block_tables: Optional[jax.Array] = None,
     chunked: bool = False,
+    chunk_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     pattern = cfg.block_pattern
     fill = cache is not None
@@ -327,7 +341,7 @@ def _apply_stack_seq(
             x, new_entry = _apply_block_seq(
                 group_params[str(i)], cfg, kind, x, positions, entry, memory,
                 causal=causal, fill_cache=fill, block_tables=block_tables,
-                chunked=chunked,
+                chunked=chunked, chunk_valid=chunk_valid,
             )
             if fill:
                 new_cache[str(i)] = new_entry
@@ -366,7 +380,7 @@ def _apply_stack_seq(
             x, new_entry = _apply_block_seq(
                 stack["rest"][str(i)], cfg, kind, x, positions, entry, memory,
                 causal=causal, fill_cache=fill, block_tables=block_tables,
-                chunked=chunked,
+                chunked=chunked, chunk_valid=chunk_valid,
             )
             if fill:
                 new_rest[str(i)] = new_entry
@@ -558,23 +572,39 @@ def prefill(
 def prefill_chunk(
     cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
     start: jax.Array, *, block_tables: Optional[jax.Array] = None,
+    lengths: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Process one prompt chunk (positions ``start..start+C-1``) against a
     cache already holding chunks for positions ``0..start-1``.
 
     Attention blocks attend over the cached earlier chunks plus the chunk
     itself (causal); recurrent/conv blocks resume from their carried state.
-    ``start`` may be a traced scalar, so one compiled executable serves
-    every chunk offset of a given chunk width.  Returns the chunk's
-    last-position logits (only meaningful for the final chunk) and the
-    updated cache.  For a VLM config, pass ``vision_embeds`` only with the
-    ``start == 0`` chunk and offset later chunk starts by
-    ``num_vision_tokens`` — mirroring the prefix handling of ``prefill``.
+    ``start`` may be a traced scalar — or, for the unified mixed-batch step,
+    a per-row (B,) vector — so one compiled executable serves every chunk
+    offset of a given chunk width.  Returns the chunk's last-position
+    logits (only meaningful for the final chunk) and the updated cache.
+
+    ``lengths`` (B,) int32, when given, marks how many of each row's C
+    columns are real tokens (ragged rows packed to one static width):
+    pad columns write nothing to the cache, recurrent states take identity
+    steps, and the returned logits come from each row's *last valid*
+    position (rows with ``lengths == 0`` return garbage logits and leave
+    their cache rows untouched).  For a VLM config, pass ``vision_embeds``
+    only with the ``start == 0`` chunk and offset later chunk starts by
+    ``num_vision_tokens`` — mirroring the prefix handling of ``prefill``;
+    ``lengths`` is not supported together with a vision prefix.
     """
     x = _embed_inputs(cfg, params, batch)
     start = jnp.asarray(start, jnp.int32)
-    positions = start + jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+    if start.ndim == 0:
+        positions = start + jnp.arange(x.shape[1], dtype=jnp.int32)[None]
+    else:
+        positions = start[:, None] + jnp.arange(x.shape[1], dtype=jnp.int32)[None]
     positions = jnp.broadcast_to(positions, x.shape[:2])
+    valid = None
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        valid = jnp.arange(x.shape[1], dtype=jnp.int32)[None] < lengths[:, None]
     memory = None
     if cfg.is_encdec:
         enc_x = batch["enc_embeds"].astype(x.dtype)
@@ -588,8 +618,14 @@ def prefill_chunk(
     x, new_cache = _apply_stack_seq(
         params["decoder"], cfg, x, positions, cache, memory,
         causal=True, remat=False, block_tables=block_tables, chunked=True,
+        chunk_valid=valid,
     )
-    logits = unembed(params.get("lm_head", params["embed"]), x[:, -1:],
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:
+        idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+    logits = unembed(params.get("lm_head", params["embed"]), x_last,
                      cfg.logit_softcap)[:, 0]
     return logits, new_cache
 

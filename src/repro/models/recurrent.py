@@ -31,11 +31,19 @@ _LOG_EPS = -1e30
 # shared helpers
 # ---------------------------------------------------------------------------
 
-def _causal_conv(x: jax.Array, w: jax.Array, history: jax.Array = None):
+def _causal_conv(x: jax.Array, w: jax.Array, history: jax.Array = None,
+                 lengths: jax.Array = None):
     """Depthwise causal conv, width K, via shifted adds.
 
     x: (B, S, W); w: (K, W).  ``history``: (B, K-1, W) previous inputs (decode
     / chunk boundary).  Returns (y, new_history).
+
+    ``lengths`` (B,), when given, marks each row's valid prefix of ``x``:
+    the returned history is then gathered per row from the last K-1 *valid*
+    inputs (``xp[b, len_b : len_b + K-1]``) instead of the tail, so ragged
+    rows in a packed chunk batch carry the right conv state forward.  A
+    zero-length row keeps its old history.  Conv *outputs* at pad positions
+    are garbage; callers mask or discard them.
     """
     K = w.shape[0]
     B, S, W = x.shape
@@ -45,7 +53,13 @@ def _causal_conv(x: jax.Array, w: jax.Array, history: jax.Array = None):
     y = jnp.zeros_like(x)
     for i in range(K):
         y = y + xp[:, i : i + S] * w[K - 1 - i]
-    new_hist = xp[:, S:, :] if K > 1 else history
+    if K <= 1:
+        new_hist = history
+    elif lengths is None:
+        new_hist = xp[:, S:, :]
+    else:
+        idx = lengths[:, None] + jnp.arange(K - 1, dtype=jnp.int32)[None]
+        new_hist = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return y, new_hist
 
 
@@ -94,7 +108,8 @@ def _rglru_gates(p, xc: jax.Array):
     return a, b
 
 
-def apply_rglru_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict]:
+def apply_rglru_seq(p, x, cfg: ModelConfig, state=None,
+                    valid: jax.Array = None) -> Tuple[jax.Array, Dict]:
     from repro.models import cache as cache_lib
 
     B, S, d = x.shape
@@ -104,8 +119,15 @@ def apply_rglru_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict
     g = act_fn("gelu")(jnp.einsum("bsd,dw->bsw", x, p["in_g"]))
     xr = jnp.einsum("bsd,dw->bsw", x, p["in_x"])
     xr = shard(xr, "batch", None, "act_ffn")
-    xc, conv_hist = _causal_conv(xr, p["conv_w"], state["conv"])
+    lengths = valid.sum(axis=1, dtype=jnp.int32) if valid is not None else None
+    xc, conv_hist = _causal_conv(xr, p["conv_w"], state["conv"], lengths)
     a, b = _rglru_gates(p, xc)
+    if valid is not None:
+        # pad steps are identity: h_t = 1*h_{t-1} + 0, so h[:, -1] is the
+        # state after each row's last *valid* input
+        m = valid[..., None]
+        a = jnp.where(m, a, 1.0)
+        b = jnp.where(m, b, 0.0)
     h = dispatch.linear_recurrence(a, b, state["h"])  # (B, S, W) fp32
     y = (h.astype(x.dtype) * g)
     y = jnp.einsum("bsw,wd->bsd", y, p["out"])
@@ -222,7 +244,8 @@ def _mlstm_chunk_scan(q, k, v, log_i, log_f, state, chunk: int):
     return h, {"C": C, "n": n, "m": m}
 
 
-def apply_mlstm_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict]:
+def apply_mlstm_seq(p, x, cfg: ModelConfig, state=None,
+                    valid: jax.Array = None) -> Tuple[jax.Array, Dict]:
     from repro.models import cache as cache_lib
 
     B, S, d = x.shape
@@ -237,7 +260,8 @@ def apply_mlstm_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict
     u = jnp.einsum("bsd,dw->bsw", x, p["up_u"])
     z = jnp.einsum("bsd,dw->bsw", x, p["up_z"])
     u = shard(u, "batch", None, "act_ffn")
-    uc, new_hist = _causal_conv(u, p["conv_w"], conv_hist)
+    lengths = valid.sum(axis=1, dtype=jnp.int32) if valid is not None else None
+    uc, new_hist = _causal_conv(u, p["conv_w"], conv_hist, lengths)
     uc = act_fn("silu")(uc)
     q = _block_diag_linear(uc, p["wq"]).reshape(B, S, H, D).astype(jnp.float32)
     k = _block_diag_linear(uc, p["wk"]).reshape(B, S, H, D).astype(jnp.float32)
@@ -246,6 +270,12 @@ def apply_mlstm_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict
     log_f = jax.nn.log_sigmoid(
         (jnp.einsum("bsw,wh->bsh", uc, p["w_f"]) + p["b_f"]).astype(jnp.float32)
     )
+    if valid is not None:
+        # identity steps at pads, same trick as the chunk-scan's own
+        # padding: log_f=0 keeps the carry, log_i=-2e30 contributes nothing
+        m = valid[..., None]
+        log_f = jnp.where(m, log_f, 0.0)
+        log_i = jnp.where(m, log_i, -2e30)
     cell_state = {"C": state["C"], "n": state["n"], "m": state["m"]}
     h, new_cell = _mlstm_chunk_scan(q, k, v, log_i, log_f, cell_state, cfg.recurrent_chunk)
     h = h.reshape(B, S, W).astype(x.dtype)
@@ -335,7 +365,8 @@ def _slstm_cell(p, H, Dh, carry, xs):
     return (c_new, n_new, m_new, h_new), h_new
 
 
-def apply_slstm_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict]:
+def apply_slstm_seq(p, x, cfg: ModelConfig, state=None,
+                    valid: jax.Array = None) -> Tuple[jax.Array, Dict]:
     from repro.models import cache as cache_lib
 
     B, S, d = x.shape
@@ -343,7 +374,8 @@ def apply_slstm_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict
     Dh = d // H
     if state is None:
         state = cache_lib.init_slstm_state(B, H, Dh, cfg.rglru_conv_width, x.dtype)
-    xc, new_hist = _causal_conv(x, p["conv_w"], state["conv"])
+    lengths = valid.sum(axis=1, dtype=jnp.int32) if valid is not None else None
+    xc, new_hist = _causal_conv(x, p["conv_w"], state["conv"], lengths)
     xc = act_fn("silu")(xc)
     pre = {}
     for name, src in (("z", x), ("i", xc), ("f", xc), ("o", x)):
@@ -353,9 +385,20 @@ def apply_slstm_seq(p, x, cfg: ModelConfig, state=None) -> Tuple[jax.Array, Dict
         )
     xs = tuple(jnp.swapaxes(pre[name], 0, 1) for name in ("z", "i", "f", "o"))
     carry = (state["c"], state["n"], state["m"], state["h"])
-    (c, n, m, h_fin), hs = jax.lax.scan(
-        lambda carry, xs_t: _slstm_cell(p, H, Dh, carry, xs_t), carry, xs
-    )
+
+    def cell(carry_t, xs_t):
+        new_carry, h_new = _slstm_cell(p, H, Dh, carry_t, xs_t[:4])
+        if valid is not None:
+            v_t = xs_t[4][:, None, None]  # (B, 1, 1)
+            new_carry = tuple(
+                jnp.where(v_t, nw, od) for nw, od in zip(new_carry, carry_t)
+            )
+            h_new = new_carry[3]
+        return new_carry, h_new
+
+    if valid is not None:
+        xs = xs + (jnp.swapaxes(valid, 0, 1),)
+    (c, n, m, h_fin), hs = jax.lax.scan(cell, carry, xs)
     h = jnp.swapaxes(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
     h = rms_norm(h, p["norm_scale"], 1e-6)
     y = jnp.einsum("bsf,fd->bsd", act_fn("gelu")(

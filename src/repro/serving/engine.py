@@ -37,7 +37,8 @@ from repro.models import model as model_lib
 from repro.models.config import ModelConfig
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.step import (init_slot_state, invalidate_slot,
-                                make_decode_sample_step, maybe_donate)
+                                make_decode_sample_step, make_engine_step,
+                                maybe_donate)
 
 _RING = 64  # host-side token ring buffer depth (tokens per slot per flush)
 
@@ -126,9 +127,20 @@ class ServingEngine:
         prefill_budget: int = 0,
         prefix_cache: bool = False,
         preemption: str = "off",
+        unified_step: bool = True,
+        pad_side: str = "left",
     ):
         assert cache_layout in ("contiguous", "paged"), cache_layout
         assert preemption in ("off", "recompute"), preemption
+        assert pad_side in ("left", "right"), pad_side
+        if pad_side == "right" and (cfg.is_encdec or cfg.num_vision_tokens):
+            raise ValueError(
+                f"pad_side='right' realigns the bucketed prompt row so "
+                f"variable-length suffixes of a shared prefix land on the "
+                f"same block boundaries; {cfg.name!r} carries an "
+                f"encoder/vision prefix whose position bookkeeping assumes "
+                f"the whole padded row is computed")
+        self.pad_side = pad_side
         if preemption != "off":
             if cache_layout != "paged":
                 raise ValueError(
@@ -216,11 +228,20 @@ class ServingEngine:
         self.recompute_tokens = 0
         self._next_pos = np.zeros(max_batch, np.int64)
         self._occ_samples: List[float] = []
+        # device-dispatch accounting: every jitted callable is wrapped by
+        # ``_counted`` so ``_dispatches`` counts executable launches; the
+        # per-step deltas feed the dispatches_per_step percentiles
+        self._dispatches = 0
+        self._dispatch_samples: List[int] = []
+        self._steps_done = 0
+        self._steps_t0: Optional[float] = None
+        self._steps_t1 = 0.0
         # PRNG chain fast-forward for resume: n rides as a traced scalar,
         # so restoring a chain is one dispatch regardless of how many
         # tokens the parked request had emitted
-        self._advance_chain = jax.jit(lambda key, n: jax.lax.fori_loop(
-            0, n, lambda _, k: jax.random.split(k)[1], key))
+        self._advance_chain = self._counted(jax.jit(
+            lambda key, n: jax.lax.fori_loop(
+                0, n, lambda _, k: jax.random.split(k)[1], key)))
 
         self.cache = model_lib.init_cache(
             cfg, max_batch, max_len, dtype, layout=cache_layout,
@@ -230,6 +251,8 @@ class ServingEngine:
         # *prefilling* state; _prefill_order is the FCFS service order
         self._cursors: List[Optional[_PrefillCursor]] = [None] * max_batch
         self._prefill_order: List[int] = []
+        # slot rows admitted this step, reset in one batched dispatch
+        self._pending_reset: List[int] = []
         self.queue: deque = deque()
         self.finished: List[Request] = []
         self._uid = 0
@@ -239,20 +262,32 @@ class ServingEngine:
         self._state = init_slot_state(
             max_batch, seed=seed + 1,
             max_blocks=self.max_blocks_per_slot if cache_layout == "paged" else 0)
-        self._step = maybe_donate(
-            make_decode_sample_step(cfg, max_len, k_max=self.top_k_max), (1, 2))
+        self._step = self._counted(maybe_donate(
+            make_decode_sample_step(cfg, max_len, k_max=self.top_k_max), (1, 2)))
+        # unified mixed prefill/decode step: one dispatch advances the whole
+        # packed cursor frontier AND decodes every armed slot.  Not taken
+        # for encoder-decoder / vision configs (their prefix embeddings ride
+        # per-chunk) — those fall back to the per-chunk dispatch path.
+        self.unified = (bool(unified_step) and self.chunk > 0
+                        and not cfg.is_encdec and not cfg.num_vision_tokens)
+        if self.unified:
+            # static packed-frontier width: the budget bounds per-step chunk
+            # work, and no cursor can hold more than max_len - 1 tokens
+            self._chunk_width = min(self.chunk_budget, max(max_len - 1, 1))
+            self._unified = self._counted(maybe_donate(
+                make_engine_step(cfg, max_len, k_max=self.top_k_max), (1, 3)))
         # admission prefill: the n-row cache template is built *inside* the
         # jitted function (from the traced batch shape), so its zeros are
         # materialized on demand by XLA instead of living as per-batch-size
         # device-resident templates on the host
-        self._prefill = jax.jit(
+        self._prefill = self._counted(jax.jit(
             lambda p, batch: model_lib.prefill(
-                cfg, p, batch, self._admit_template(batch)))
-        self._prefill_paged = jax.jit(
+                cfg, p, batch, self._admit_template(batch))))
+        self._prefill_paged = self._counted(jax.jit(
             lambda p, batch, live_cache, tables: model_lib.prefill(
                 cfg, p, batch,
                 self._graft_pools(self._admit_template(batch), live_cache),
-                block_tables=tables))
+                block_tables=tables)))
 
         # chunked prefill: one chunk of one slot against the live cache.
         # ``start`` and ``slot`` ride as traced scalars, so the executable
@@ -261,27 +296,28 @@ class ServingEngine:
         # (appending K/V mid-prompt), and the row is scattered back; pool
         # leaves pass through whole — the append already wrote into them
         # through the block table.
-        def _chunk_body(p, batch, start, slots, cache, tables):
+        def _chunk_body(p, batch, start, slots, cache, tables, lengths=None):
             part = self._slice_slots(cache, slots)
             logits, part = model_lib.prefill_chunk(
-                cfg, p, batch, part, start, block_tables=tables)
+                cfg, p, batch, part, start, block_tables=tables,
+                lengths=lengths)
             return logits, self._merge_admitted(cache, part, slots)
 
-        self._chunk_contig = maybe_donate(
-            lambda p, batch, start, slots, cache: _chunk_body(
-                p, batch, start, slots, cache, None), (4,))
-        self._chunk_paged = maybe_donate(_chunk_body, (4,))
+        self._chunk_contig = self._counted(maybe_donate(
+            lambda p, batch, start, slots, cache, lengths=None: _chunk_body(
+                p, batch, start, slots, cache, None, lengths), (4,)))
+        self._chunk_paged = self._counted(maybe_donate(_chunk_body, (4,)))
         # admission-time reset of one slot's cache row to init values (the
         # unchunked path resets implicitly by overwriting the whole row at
         # prefill; a chunk only writes its own span, so stale positions /
         # recurrent state from the previous occupant must be cleared first)
-        self._reset_rows = maybe_donate(
+        self._reset_rows = self._counted(maybe_donate(
             lambda cache, slots: self._merge_admitted(
                 cache,
                 self._graft_pools(
                     self._admit_template({"tokens": jnp.zeros(
                         (slots.shape[0], 1), jnp.int32)}), cache),
-                slots), (0,))
+                slots), (0,)))
 
         # host-side token ring buffer: (max_batch, _RING) plus fill counts
         self._ring = np.zeros((max_batch, _RING), np.int32)
@@ -292,6 +328,15 @@ class ServingEngine:
         self._win_t0: Optional[float] = None
         self._win_tokens: Dict[int, int] = {}
         self.attributed_joules = 0.0
+
+    def _counted(self, fn):
+        """Wrap a jitted callable so every launch bumps ``_dispatches``."""
+
+        def run(*args):
+            self._dispatches += 1
+            return fn(*args)
+
+        return run
 
     # -- public API -----------------------------------------------------------
     def submit(self, prompt: np.ndarray,
@@ -312,16 +357,36 @@ class ServingEngine:
                 or any(s is not None for s in self.slots))
 
     def step(self) -> bool:
-        """One admit + chunk + decode round; returns True if work was done."""
+        """One admit + chunk + decode round; returns True if work was done.
+
+        On the unified path the chunk advance and the decode are one fused
+        dispatch (``make_engine_step``): the FCFS frontier is *picked* on
+        the host first (no device work), block growth/preemption runs, and
+        then a single launch advances every cursor row and decodes every
+        armed slot.  The legacy path dispatches one chunk per cursor
+        quantum plus a separate decode step."""
         if not self.busy:
             return False
+        t0 = time.perf_counter()
+        d0 = self._dispatches
         self._admit()
-        self._advance_chunks()
-        self._grow_decode_blocks()
-        self._decode_once()
+        self._flush_resets()  # one batched row-reset dispatch per step
+        if self.unified:
+            frontier = self._pick_frontier()
+            self._grow_decode_blocks()
+            self._unified_once(frontier)
+        else:
+            self._advance_chunks()
+            self._grow_decode_blocks()
+            self._decode_once()
         if self.layout == "paged":
             self._occ_samples.append(
                 self._pool.in_use / max(self.num_blocks - 1, 1))
+        if self._steps_t0 is None:
+            self._steps_t0 = t0
+        self._steps_t1 = time.perf_counter()
+        self._steps_done += 1
+        self._dispatch_samples.append(self._dispatches - d0)
         return True
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -349,6 +414,13 @@ class ServingEngine:
 
 
     # -- internals --------------------------------------------------------------
+    def _flush_resets(self) -> None:
+        """Run the step's deferred admission row resets as one dispatch."""
+        if self._pending_reset:
+            slots, self._pending_reset = self._pending_reset, []
+            self.cache = self._reset_rows(
+                self.cache, jnp.asarray(slots, jnp.int32))
+
     def _bucketed(self, n: int) -> int:
         b = self.prompt_bucket
         return min(self.max_len - 1, ((n + b - 1) // b) * b)
@@ -384,21 +456,40 @@ class ServingEngine:
 
     # -- prefix cache ------------------------------------------------------------
     def _padded_prompt(self, req: Request, plen: int) -> np.ndarray:
-        """The bucketed, left-padded token row admission actually prefills
-        (prompts longer than the bucket keep their newest context)."""
+        """The bucketed token row admission actually prefills (prompts
+        longer than the bucket keep their newest context).
+
+        ``pad_side="left"`` (default) zero-pads on the left, so the real
+        tokens always end at the bucket boundary.  ``pad_side="right"``
+        puts the content first: variable-length prompts sharing a prefix
+        then hash to the *same* block chain regardless of their suffix
+        length, so the prefix cache can share their blocks — at the cost
+        of the row carrying a true span shorter than the bucket (pad
+        positions past the span are never computed)."""
         use = req.prompt
         if len(use) > plen:
             use = use[-plen:]
             req.truncated = True
         toks = np.zeros(plen, np.int32)
-        toks[-len(use):] = use
+        if self.pad_side == "left":
+            toks[-len(use):] = use
+        else:
+            toks[:len(use)] = use
         return toks
 
-    def _lookup_width(self, plen: int) -> int:
+    def _true_span(self, req: Request, plen: int) -> int:
+        """Positions of the bucketed row that are actually computed: the
+        whole row when left-padded, only the content prefix when
+        right-padded."""
+        if self.pad_side == "left":
+            return plen
+        return min(len(req.prompt), plen)
+
+    def _lookup_width(self, span: int) -> int:
         """Cacheable-prefix cap: the block holding the last prompt position
         is always recomputed, so the final chunk's logits (which seed the
         first sampled token) exist even on a full-prefix hit."""
-        return (plen - 1) // self.block_size
+        return (span - 1) // self.block_size
 
     def _hashes_for(self, req: Request, plen: int) -> List[int]:
         """The request's full-block hash chain, memoized on the request —
@@ -413,7 +504,8 @@ class ServingEngine:
         if not self.prefix_cache:
             return 0
         hashes = self._hashes_for(req, plen)
-        return self._pool.peek(hashes[:self._lookup_width(plen)])
+        span = self._true_span(req, plen)
+        return self._pool.peek(hashes[:self._lookup_width(span)])
 
     def _admit(self) -> None:
         # preempted requests re-admit first, oldest admission first; a
@@ -444,7 +536,8 @@ class ServingEngine:
                     # conservative (never counts a block an interleaved
                     # allocation could evict), so commit-time lookup can
                     # only find more hits than budgeted here, never fewer
-                    nb = (self._blocks_for(plen, req.params.max_new_tokens)
+                    span = self._true_span(req, plen)
+                    nb = (self._blocks_for(span, req.params.max_new_tokens)
                           - self._peek_hit(req, plen))
                     if blocks_reserved + nb > self._pool.available:
                         break
@@ -461,6 +554,11 @@ class ServingEngine:
             slots_for = free[:len(picked)]
             if self.chunk > 0:
                 self._admit_chunked(picked, slots_for, plen)
+            elif self.pad_side == "right":
+                # right-padded rows carry per-request true spans, which the
+                # batched whole-row prefill can't express; admit through the
+                # cursor path and run each span as one masked chunk
+                self._admit_right_unchunked(picked, slots_for, plen)
             else:
                 self._admit_batch(picked, slots_for, plen)
 
@@ -530,26 +628,28 @@ class ServingEngine:
                 req, slot, plen, logits[r:r + 1],
                 tables_np[r] if self.layout == "paged" else None)
 
-    def _claim_prefix_blocks(self, req: Request, slot: int, plen: int,
+    def _claim_prefix_blocks(self, req: Request, slot: int, span: int,
                              hashes: List[int], hit: List[int],
                              nb: Optional[int] = None):
         """Commit one admission's pool blocks: reused prefix blocks first
         (already increfed by ``lookup``), freshly allocated ones after, in
         table order.  Full prompt blocks past the hit are registered for
-        future sharers (not yet ready — the caller fills them).  Returns
-        ``(tables_np, start, pending)``: the slot's table row, the first
-        position prefill must compute, and the (end, block) pairs to mark
-        ready as the fill passes them.  ``nb`` overrides the block count
-        (recompute re-admission covers prompt + generated tokens)."""
+        future sharers (not yet ready — the caller fills them).  ``span``
+        is the computed extent of the row (== the bucket when left-padded;
+        the content prefix when right-padded).  Returns ``(tables_np,
+        start, pending)``: the slot's table row, the first position
+        prefill must compute, and the (end, block) pairs to mark ready as
+        the fill passes them.  ``nb`` overrides the block count (recompute
+        re-admission covers prompt + generated tokens)."""
         h = len(hit)
         if nb is None:
-            nb = self._blocks_for(plen, req.params.max_new_tokens)
+            nb = self._blocks_for(span, req.params.max_new_tokens)
         blocks = hit + self._pool.allocate(nb - h)
         tables_np = np.zeros(self.max_blocks_per_slot, np.int32)
         tables_np[:nb] = blocks
         self._slot_blocks[slot] = blocks
         pending = []
-        for i in range(h, plen // self.block_size):
+        for i in range(h, span // self.block_size):
             if self._pool.register(hashes[i], blocks[i]):
                 pending.append(((i + 1) * self.block_size, blocks[i]))
         if h:
@@ -590,6 +690,7 @@ class ServingEngine:
         would otherwise leak into the chunk's attention and state."""
         for req, slot in zip(reqs, slots_for):
             toks = self._padded_prompt(req, plen)
+            span = self._true_span(req, plen)
             tables_np = None
             start = 0
             pending: List = []
@@ -598,26 +699,60 @@ class ServingEngine:
                 # first non-cached block and its chunks attend to the
                 # shared blocks through the block table
                 hashes = self._hashes_for(req, plen)
-                hit = self._pool.lookup(hashes[:self._lookup_width(plen)])
+                hit = self._pool.lookup(hashes[:self._lookup_width(span)])
                 self.prefix_lookups += 1
                 tables_np, start, pending = self._claim_prefix_blocks(
-                    req, slot, plen, hashes, hit)
+                    req, slot, span, hashes, hit)
             elif self.layout == "paged":
-                nb = self._blocks_for(plen, req.params.max_new_tokens)
+                nb = self._blocks_for(span, req.params.max_new_tokens)
                 blocks = self._pool.allocate(nb)
                 tables_np = np.zeros(self.max_blocks_per_slot, np.int32)
                 tables_np[:nb] = blocks
                 self._slot_blocks[slot] = blocks
             self.slots[slot] = req
             self._cursors[slot] = _PrefillCursor(
-                req=req, tokens=toks, plen=plen, next=start,
+                req=req, tokens=toks, plen=span, next=start,
                 tables_np=tables_np, pending_ready=pending)
             self._prefill_order.append(slot)
+            if tables_np is not None:
+                # arm the table row now: the unified step's packed chunk
+                # routes through state["block_tables"] (inert on the
+                # per-chunk path — tables ride as an explicit argument)
+                self._state["block_tables"] = (
+                    self._state["block_tables"].at[slot].set(
+                        jnp.asarray(tables_np)))
         if self.layout == "paged":
             self.peak_blocks_in_use = max(self.peak_blocks_in_use,
                                           self.blocks_in_use)
-        self.cache = self._reset_rows(
-            self.cache, jnp.asarray(slots_for, jnp.int32))
+        # defer the row resets: every admission of the step lands in ONE
+        # batched _reset_rows dispatch (flushed before any chunk runs),
+        # keeping the unified path at <= 2 dispatches per engine step
+        self._pending_reset.extend(slots_for)
+
+    def _admit_right_unchunked(self, reqs: List[Request],
+                               slots_for: List[int], plen: int) -> None:
+        """Unchunked admission of right-padded rows: reserve through the
+        chunked path (which already handles per-request true spans and
+        prefix hits), then immediately run each request's whole span as
+        one masked chunk padded to the bucket width — so the request is
+        decode-eligible in the same step, matching the left-padded
+        unchunked admission's semantics, while every bucket still
+        compiles a single chunk executable."""
+        self._admit_chunked(reqs, slots_for, plen)
+        self._flush_resets()  # the spans run now, not at the step's flush
+        for slot in list(slots_for):
+            cur = self._cursors[slot]
+            if cur is None:
+                continue
+            c = cur.plen - cur.next
+            logits = self._run_chunk(slot, cur, c, pad_to=plen)
+            cur.next = cur.plen
+            while cur.pending_ready:
+                self._pool.mark_ready(cur.pending_ready.pop(0)[1])
+            self._prefill_order.remove(slot)
+            self._cursors[slot] = None
+            self._start_decoding(cur.req, slot, cur.plen, logits,
+                                 cur.tables_np)
 
     def _advance_chunks(self) -> None:
         """Spend the per-step prefill budget on cursors, FCFS.  A cursor's
@@ -648,9 +783,20 @@ class ServingEngine:
                     self._start_decoding(cur.req, slot, cur.plen, logits,
                                          cur.tables_np)
 
-    def _run_chunk(self, slot: int, cur: _PrefillCursor, c: int):
-        """One chunk of one slot's prompt through the jitted chunk step."""
-        batch = {"tokens": jnp.asarray(cur.tokens[cur.next:cur.next + c][None])}
+    def _run_chunk(self, slot: int, cur: _PrefillCursor, c: int,
+                   pad_to: int = 0):
+        """One chunk of one slot's prompt through the jitted chunk step.
+
+        ``pad_to > c`` zero-pads the token row to a static width and
+        threads the true length through the masked-append path (used by
+        right-padded unchunked admission, so every bucket width compiles
+        one executable regardless of each prompt's true span)."""
+        toks = cur.tokens[cur.next:cur.next + c]
+        lengths = None
+        if pad_to > c:
+            toks = np.concatenate([toks, np.zeros(pad_to - c, np.int32)])
+            lengths = jnp.asarray([c], jnp.int32)
+        batch = {"tokens": jnp.asarray(toks[None])}
         start = cur.next
         nv = self.cfg.num_vision_tokens
         if self.cfg.is_encdec:
@@ -668,11 +814,81 @@ class ServingEngine:
         if self.layout == "paged":
             logits, self.cache = self._chunk_paged(
                 self.params, batch, start, slots, self.cache,
-                jnp.asarray(cur.tables_np[None]))
+                jnp.asarray(cur.tables_np[None]), lengths)
         else:
             logits, self.cache = self._chunk_contig(
-                self.params, batch, start, slots, self.cache)
+                self.params, batch, start, slots, self.cache, lengths)
         return logits
+
+    # -- unified mixed prefill/decode step ---------------------------------------
+    def _pick_frontier(self) -> List[tuple]:
+        """The FCFS cursor frontier one unified step will advance: exactly
+        the chunks ``_advance_chunks`` would run, but *picked* instead of
+        dispatched, with consecutive quanta of the same head cursor
+        coalesced into one packed row (their positions are consecutive, so
+        one masked row of width <= budget covers them).  Returns
+        ``[(slot, cursor, n_tokens)]``; budget semantics are identical to
+        the legacy loop — a head chunk that doesn't fit the remaining
+        budget stops the scan."""
+        budget = self.chunk_budget
+        frontier: List[tuple] = []
+        for slot in self._prefill_order:
+            cur = self._cursors[slot]
+            take = 0
+            while True:
+                c = min(self.chunk, cur.plen - cur.next - take)
+                if c <= 0 or c > budget:
+                    break
+                take += c
+                budget -= c
+            if take:
+                frontier.append((slot, cur, take))
+            if cur.next + take < cur.plen:
+                break  # head cursor unfinished: no budget flows past it
+        return frontier
+
+    def _unified_once(self, frontier: List[tuple]) -> None:
+        """One fused device dispatch: advance the packed frontier and run
+        decode+sample+finish for every armed slot.  With no frontier this
+        degrades to the plain decode step (still one dispatch)."""
+        if not frontier:
+            self._decode_once()
+            return
+        W = self._chunk_width
+        tokens = np.zeros((self.max_batch, W), np.int32)
+        starts = np.zeros(self.max_batch, np.int32)
+        lens = np.zeros(self.max_batch, np.int32)
+        for slot, cur, c in frontier:
+            tokens[slot, :c] = cur.tokens[cur.next:cur.next + c]
+            starts[slot] = cur.next
+            lens[slot] = c
+        chunk = {"tokens": jnp.asarray(tokens), "start": jnp.asarray(starts),
+                 "length": jnp.asarray(lens)}
+        self._state, self.cache, out, chunk_logits = self._unified(
+            self.params, self._state, chunk, self.cache)
+        # the single packed host<->device sync of the step
+        out_np, logits_np = jax.device_get((out, chunk_logits))
+        for slot, cur, c in frontier:
+            if self._cursors[slot] is not cur:
+                # the slot was preempted between frontier pick and dispatch
+                # (_grow_decode_blocks ran dry): its table row was pointed
+                # at the garbage block before the launch, so the chunk's
+                # writes landed in trash — drop the stale advance
+                continue
+            cur.next += c
+            while cur.pending_ready and cur.pending_ready[0][0] <= cur.next:
+                self._pool.mark_ready(cur.pending_ready.pop(0)[1])
+            if cur.next == cur.plen:  # final chunk landed: decode-eligible
+                self._prefill_order.remove(slot)
+                self._cursors[slot] = None
+                if cur.resume_n > 0:
+                    self._resume_decoding(cur.req, slot, cur.plen,
+                                          cur.resume_n, cur.tables_np)
+                else:
+                    self._start_decoding(cur.req, slot, cur.plen,
+                                         logits_np[slot:slot + 1],
+                                         cur.tables_np)
+        self._process_decode_out(out_np)
 
     # -- preemption + recompute ------------------------------------------------
     def _grow_decode_blocks(self) -> None:
@@ -757,8 +973,9 @@ class ServingEngine:
         if not free:
             return False
         plen = self._bucketed(len(req.prompt))
+        span = self._true_span(req, plen)
         n = len(req.output_tokens)
-        total = plen + max(n - 1, 0)  # positions to recompute: 0..total-1
+        total = span + max(n - 1, 0)  # positions to recompute: 0..total-1
         nb = min(cache_lib.blocks_per_slot(min(total + 1, self.max_len),
                                            self.block_size),
                  self.max_blocks_per_slot)
@@ -766,7 +983,7 @@ class ServingEngine:
             return False
         self._preempted.pop(0)
         slot = free[0]
-        toks = self._padded_prompt(req, plen)
+        toks = self._padded_prompt(req, plen)[:span]
         if n > 1:
             toks = np.concatenate(
                 [toks, np.asarray(req.output_tokens[:n - 1], np.int32)])
@@ -774,10 +991,10 @@ class ServingEngine:
         pending: List = []
         if self.prefix_cache:
             hashes = self._hashes_for(req, plen)
-            hit = self._pool.lookup(hashes[:self._lookup_width(plen)])
+            hit = self._pool.lookup(hashes[:self._lookup_width(span)])
             self.prefix_lookups += 1
             tables_np, start, pending = self._claim_prefix_blocks(
-                req, slot, plen, hashes, hit, nb=nb)
+                req, slot, span, hashes, hit, nb=nb)
         else:
             blocks = self._pool.allocate(nb)
             tables_np = np.zeros(self.max_blocks_per_slot, np.int32)
@@ -787,17 +1004,23 @@ class ServingEngine:
                                           self.blocks_in_use)
         self.slots[slot] = req
         self.recompute_tokens += total - start
-        # the slot row held another request since: clear stale positions /
-        # recurrent state before the replay scatters into it
-        self.cache = self._reset_rows(
-            self.cache, jnp.asarray([slot], jnp.int32))
+        # the slot row may have held another request since: stale positions
+        # / recurrent state must be cleared before the replay scatters into
+        # it (deferred into the step's single batched reset dispatch)
+        self._pending_reset.append(slot)
         cur = _PrefillCursor(req=req, tokens=toks, plen=total, next=start,
                              tables_np=tables_np, pending_ready=pending,
                              resume_n=n)
         if self.chunk > 0:
             self._cursors[slot] = cur
             self._prefill_order.append(slot)
+            # arm the table row for the unified step's packed chunk (the
+            # per-chunk path passes tables explicitly; harmless there)
+            self._state["block_tables"] = (
+                self._state["block_tables"].at[slot].set(
+                    jnp.asarray(tables_np)))
         else:
+            self._flush_resets()  # the replay chunk runs right now
             logits = self._run_chunk(slot, cur, total - start)
             for _, blk in pending:
                 self._pool.mark_ready(blk)
@@ -947,7 +1170,11 @@ class ServingEngine:
             return
         self._state, self.cache, out = self._step(
             self.params, self._state, self.cache)
-        out_np = np.asarray(out)  # the single host<->device sync per step
+        self._process_decode_out(np.asarray(out))  # single host sync
+
+    def _process_decode_out(self, out_np: np.ndarray) -> None:
+        """Host-side bookkeeping of one decode's packed (3, B) output
+        (shared by the split and unified step paths)."""
         tokens, done, emitted = out_np[0], out_np[1], out_np[2]
         for slot in np.nonzero(emitted)[0]:
             req = self.slots[slot]
@@ -1077,6 +1304,13 @@ class ServingEngine:
                 summary[f"{name}_p{q}_ms"] = _percentile(xs, q) * 1e3
         summary["kv_bytes_peak"] = self.kv_bytes_in_use(peak=True)
         summary["kv_bytes_worst_case"] = self.kv_bytes_worst_case
+        if self._steps_done:
+            wall = max(self._steps_t1 - (self._steps_t0 or 0.0), 1e-9)
+            summary["steps_per_sec"] = self._steps_done / wall
+            summary["dispatches_per_step_p50"] = _percentile(
+                self._dispatch_samples, 50)
+            summary["dispatches_per_step_p95"] = _percentile(
+                self._dispatch_samples, 95)
         if self.layout == "paged":
             summary["preemptions"] = self.preemptions
             summary["recompute_tokens"] = self.recompute_tokens
@@ -1088,6 +1322,14 @@ class ServingEngine:
                 self.prefix_hits / max(self.prefix_lookups, 1))
             summary["prefix_blocks_reused"] = self.prefix_blocks_reused
             summary["prefill_tokens_skipped"] = self.prefill_tokens_skipped
+            # per-prefix residency: the pool attributes block-granular
+            # hits/misses/evictions to each registered content hash
+            stats = self._pool.prefix_stats.values()
+            summary["prefix_block_hits"] = sum(s[0] for s in stats)
+            summary["prefix_block_misses"] = sum(s[1] for s in stats)
+            summary["prefix_block_evictions"] = sum(s[2] for s in stats)
+            summary["prefix_hashes_tracked"] = len(self._pool.prefix_stats)
+            summary["prefix_blocks_resident"] = len(self._pool.ready)
         if self.monitor is not None:
             total_j = sum(r.joules for r in self.finished)
             summary["joules_total"] = total_j

@@ -135,30 +135,77 @@ def make_decode_sample_step(cfg: ModelConfig, max_len: int,
     """
 
     def step(params, state: Dict[str, jax.Array], cache) -> Tuple[Dict, Dict, jax.Array]:
-        active = state["active"]
-        logits, new_cache = model_lib.decode_step(
-            cfg, params, state["tokens"], state["positions"], cache,
-            block_tables=state.get("block_tables"), update_mask=active)
-        split = jax.vmap(jax.random.split)(state["keys"])   # (B, 2, 2)
-        tok = sample_slots_keyed(logits, state["temperature"], state["top_k"],
-                                 split[:, 0], k_max=k_max)
+        return _decode_sample_body(cfg, max_len, k_max, params, state, cache)
 
-        act_i = active.astype(jnp.int32)
-        tok = jnp.where(active, tok, state["tokens"][:, 0])
-        positions = state["positions"] + act_i
-        remaining = state["remaining"] - act_i
-        hit_eos = (state["eos"] >= 0) & (tok == state["eos"])
-        done = active & (hit_eos | (remaining <= 0) | (positions >= max_len - 1))
+    return step
 
-        new_state = dict(state)  # block_tables etc. pass through untouched
-        new_state.update(
-            tokens=tok[:, None],
-            positions=positions,
-            active=active & ~done,
-            remaining=remaining,
-            keys=jnp.where(active[:, None], split[:, 1], state["keys"]),
-        )
-        out = jnp.stack([tok, done.astype(jnp.int32), act_i])
-        return new_state, new_cache, out
+
+def _decode_sample_body(cfg: ModelConfig, max_len: int, k_max: int,
+                        params, state: Dict[str, jax.Array], cache):
+    """Shared decode+sample+finish body of ``make_decode_sample_step`` and
+    ``make_engine_step`` (identical math, so fused and split paths emit
+    byte-identical streams)."""
+    active = state["active"]
+    logits, new_cache = model_lib.decode_step(
+        cfg, params, state["tokens"], state["positions"], cache,
+        block_tables=state.get("block_tables"), update_mask=active)
+    split = jax.vmap(jax.random.split)(state["keys"])   # (B, 2, 2)
+    tok = sample_slots_keyed(logits, state["temperature"], state["top_k"],
+                             split[:, 0], k_max=k_max)
+
+    act_i = active.astype(jnp.int32)
+    tok = jnp.where(active, tok, state["tokens"][:, 0])
+    positions = state["positions"] + act_i
+    remaining = state["remaining"] - act_i
+    hit_eos = (state["eos"] >= 0) & (tok == state["eos"])
+    done = active & (hit_eos | (remaining <= 0) | (positions >= max_len - 1))
+
+    new_state = dict(state)  # block_tables etc. pass through untouched
+    new_state.update(
+        tokens=tok[:, None],
+        positions=positions,
+        active=active & ~done,
+        remaining=remaining,
+        keys=jnp.where(active[:, None], split[:, 1], state["keys"]),
+    )
+    out = jnp.stack([tok, done.astype(jnp.int32), act_i])
+    return new_state, new_cache, out
+
+
+def make_engine_step(cfg: ModelConfig, max_len: int,
+                     k_max: int = 64) -> Callable:
+    """The unified mixed prefill/decode step: ONE jitted device dispatch per
+    engine step, however many prefill cursors are in flight.
+
+    Returns ``step(params, state, chunk, cache) -> (state', cache', out,
+    chunk_logits)``.  ``chunk`` is the packed FCFS cursor frontier, slot-
+    aligned at a static width W:
+
+      tokens (B, W) int32 — row s holds slot s's next prompt-chunk tokens
+      start  (B,)   int32 — each row's absolute start position
+      length (B,)   int32 — valid tokens in the row (0 = slot has no cursor)
+
+    The chunk advance runs first (masked appends via ``prefill_chunk``'s
+    ``lengths`` path — rows with length 0 write nothing), then the decode+
+    sample+finish body runs over the chunk-updated cache exactly as in
+    ``make_decode_sample_step`` — mirroring the legacy engine's
+    chunks-then-decode ordering within a step, so token streams are
+    byte-identical to the per-chunk dispatch path.  ``out`` is the same
+    packed (3, B) int32 sync; ``chunk_logits`` (B, vocab) holds each row's
+    last-valid-position logits, from which the host samples a finishing
+    cursor's first token (rows mid-prompt or without a cursor are garbage
+    and ignored).  A prefilling slot is inactive in ``state``, so the
+    decode half's ``update_mask`` keeps it from disturbing the freshly
+    appended chunk K/V — same invariant as the split path.
+    """
+
+    def step(params, state: Dict[str, jax.Array], chunk: Dict[str, jax.Array],
+             cache):
+        chunk_logits, cache = model_lib.prefill_chunk(
+            cfg, params, {"tokens": chunk["tokens"]}, cache, chunk["start"],
+            block_tables=state.get("block_tables"), lengths=chunk["length"])
+        new_state, new_cache, out = _decode_sample_body(
+            cfg, max_len, k_max, params, state, cache)
+        return new_state, new_cache, out, chunk_logits
 
     return step

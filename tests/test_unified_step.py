@@ -1,0 +1,259 @@
+"""Unified mixed prefill/decode step suite.
+
+The contract under test: fusing the packed chunked-prefill frontier and
+the decode+sample step into ONE device dispatch per engine step changes
+*how many launches* a step costs, never *what tokens come out*.  For
+{contiguous, paged} x {greedy, sampled} x {chunked, unchunked-budget} x
+preemption on/off, the unified engine must emit token streams
+byte-identical to the per-chunk dispatch path for the same seed.  The
+dispatch economics ride along: a chunked unified engine without
+preemption never exceeds two dispatches per step (the fused step plus at
+most one batched admission row-reset), asserted both on curated traces
+and as a hypothesis invariant over random Poisson workloads.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+from repro.serving.workload import LengthDist, WorkloadSpec, poisson_trace
+
+pytestmark = pytest.mark.chunked
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _arrivals(cfg, n=6, temperature=0.0, seed=2):
+    spec = WorkloadSpec(
+        arrival_rate=0.0, num_requests=n,
+        prompt_len=LengthDist(kind="lognormal", mean=16.0, low=2, high=48),
+        output_len=LengthDist(kind="uniform", low=2, high=9),
+        temperature=temperature, top_k=8, seed=seed,
+    )
+    return poisson_trace(spec, cfg.vocab_size)
+
+
+def _streams(cfg, params, arrivals, layout, chunk, unified, **kw):
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8, cache_layout=layout,
+                        prefill_chunk=chunk, unified_step=unified, **kw)
+    for a in arrivals:
+        eng.submit(a.prompt, a.params)
+    finished = eng.run()
+    return eng, {r.uid: list(r.output_tokens) for r in finished}
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("chunk,budget", [(8, 0), (4, 16)])
+def test_unified_matches_per_chunk(small_model, layout, temperature,
+                                   chunk, budget):
+    """Unified-step streams == per-chunk-dispatch streams, both layouts,
+    greedy and sampled, single-chunk and multi-quantum budgets."""
+    cfg, params = small_model
+    arrivals = _arrivals(cfg, temperature=temperature)
+    uni_eng, uni = _streams(cfg, params, arrivals, layout, chunk, True,
+                            prefill_budget=budget)
+    leg_eng, leg = _streams(cfg, params, arrivals, layout, chunk, False,
+                            prefill_budget=budget)
+    assert uni == leg and len(uni) == len(arrivals)
+    assert uni_eng.unified and not leg_eng.unified
+    if layout == "paged":
+        assert uni_eng.blocks_in_use == 0  # every block returned at drain
+
+
+def test_unified_matches_unchunked(small_model):
+    """The fused path also reproduces the whole-prompt admission engine's
+    streams (transitively: unified == per-chunk == unchunked)."""
+    cfg, params = small_model
+    arrivals = _arrivals(cfg, temperature=0.7, seed=5)
+    _, base = _streams(cfg, params, arrivals, "paged", 0, True)
+    _, uni = _streams(cfg, params, arrivals, "paged", 8, True)
+    assert uni == base
+
+
+@pytest.mark.parametrize("unified", [True, False])
+def test_unified_preemption_equivalence(small_model, unified):
+    """An overcommitted pool preempts and recomputes under the unified
+    step exactly as under the split path: streams stay byte-identical to
+    an uncontended run, and preemptions actually fire."""
+    cfg, params = small_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(10, 25)))
+               for _ in range(8)]
+
+    def run(**kw):
+        eng = ServingEngine(cfg, params, max_batch=3, max_len=64,
+                            prompt_bucket=8, seed=3, cache_layout="paged",
+                            prefill_chunk=4, kv_block_size=8, **kw)
+        for p in prompts:
+            eng.submit(p, SamplingParams(max_new_tokens=10, temperature=0.8))
+        return {r.uid: list(r.output_tokens) for r in eng.run()}, eng
+
+    base, _ = run(unified_step=False)
+    got, eng = run(unified_step=unified, preemption="recompute",
+                   kv_num_blocks=10)
+    assert got == base
+    assert eng.preemptions > 0, "pool never ran dry: test lost its teeth"
+
+
+def test_dispatches_per_step_bounded(small_model):
+    """A chunked unified engine (no preemption) spends at most two device
+    dispatches per engine step — one fused step plus at most one batched
+    admission row-reset — however many prefill cursors are in flight."""
+    cfg, params = small_model
+    arrivals = _arrivals(cfg, n=8, temperature=0.7, seed=9)
+    for layout in ("contiguous", "paged"):
+        eng, _ = _streams(cfg, params, arrivals, layout, 4, True,
+                          prefill_budget=12)
+        assert eng._dispatch_samples, "no steps recorded"
+        assert max(eng._dispatch_samples) <= 2, (
+            layout, eng._dispatch_samples)
+
+
+def test_unified_budget_semantics_preserved(small_model):
+    """The packed frontier replicates the legacy budget loop: per-step
+    prompt progress is bounded by the budget, and a head chunk that does
+    not fit stops the scan (FCFS, no work-stealing past the head)."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8, prefill_chunk=8, prefill_budget=8)
+    rng = np.random.default_rng(3)
+    eng.submit(rng.integers(1, cfg.vocab_size, 24),
+               SamplingParams(max_new_tokens=2))
+    eng.submit(rng.integers(1, cfg.vocab_size, 24),
+               SamplingParams(max_new_tokens=2))
+    eng.step()  # both admitted; budget covers one 8-token chunk (head only)
+    curs = [c for c in eng._cursors if c is not None]
+    assert sorted(c.next for c in curs) == [0, 8]
+    eng.step()
+    curs = [c for c in eng._cursors if c is not None]
+    assert sorted(c.next for c in curs) == [0, 16]
+
+
+def test_pad_right_prefix_block_sharing(small_model):
+    """Right-aligned bucketing: two prompts sharing a prefix but with
+    *different-length* suffixes reuse the same cached blocks (left
+    padding would shift the shared tokens onto different boundaries)."""
+    cfg, params = small_model
+    shared = np.arange(1, 13)  # 12 tokens = 3 full blocks of 4
+
+    def run(pad_side):
+        eng = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                            prompt_bucket=8, cache_layout="paged",
+                            prefill_chunk=4, kv_block_size=4,
+                            prefix_cache=True, pad_side=pad_side)
+        eng.submit(np.concatenate([shared, [60, 61]]),
+                   SamplingParams(max_new_tokens=4))
+        eng.run()
+        eng.submit(np.concatenate([shared, [70, 71, 72]]),
+                   SamplingParams(max_new_tokens=4))
+        eng.run()
+        return eng.latency_summary()
+
+    right = run("right")
+    assert right["prefix_blocks_reused"] >= 2
+    assert right["prefix_block_hits"] >= 2
+    # same workload, left padding: the unequal suffix lengths misalign the
+    # shared prefix, so no block can match
+    left = run("left")
+    assert left["prefix_blocks_reused"] == 0
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("chunk", [0, 8])
+def test_pad_right_stream_equivalence(small_model, layout, chunk):
+    """pad_side='right' engines agree between the unified and per-chunk
+    paths (right padding changes RoPE positions vs 'left', so the
+    invariant is unified == legacy *within* the padding mode)."""
+    cfg, params = small_model
+    arrivals = _arrivals(cfg, temperature=0.7, seed=11)
+    _, uni = _streams(cfg, params, arrivals, layout, chunk, True,
+                      pad_side="right")
+    _, leg = _streams(cfg, params, arrivals, layout, chunk, False,
+                      pad_side="right")
+    assert uni == leg and len(uni) == len(arrivals)
+
+
+def test_summary_reports_step_economics(small_model):
+    """latency_summary carries the new step-economics and per-prefix
+    residency keys."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8, cache_layout="paged",
+                        prefill_chunk=8, prefix_cache=True)
+    rng = np.random.default_rng(0)
+    eng.submit(rng.integers(1, cfg.vocab_size, 12),
+               SamplingParams(max_new_tokens=4))
+    eng.run()
+    s = eng.latency_summary()
+    assert s["steps_per_sec"] > 0
+    assert s["dispatches_per_step_p95"] >= 1
+    assert s["dispatches_per_step_p50"] <= s["dispatches_per_step_p95"]
+    for key in ("prefix_block_hits", "prefix_block_misses",
+                "prefix_block_evictions", "prefix_hashes_tracked",
+                "prefix_blocks_resident"):
+        assert key in s, key
+
+
+# -- hypothesis: the dispatch bound holds for random workloads ----------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # property test degrades to a skip, module still runs
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+
+    _MODEL_CACHE = {}
+
+    def _prop_model():
+        if "m" not in _MODEL_CACHE:
+            cfg = get_config("qwen1.5-0.5b", smoke=True)
+            params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
+            _MODEL_CACHE["m"] = (cfg, params)
+        return _MODEL_CACHE["m"]
+
+    @given(
+        layout=st.sampled_from(["contiguous", "paged"]),
+        chunk=st.sampled_from([2, 4, 8]),
+        budget_mult=st.integers(1, 3),
+        n=st.integers(2, 6),
+        seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=6, deadline=None)
+    def test_dispatch_bound_invariant(layout, chunk, budget_mult, n, seed):
+        """Hypothesis: any chunked non-preemptive unified engine serves
+        any Poisson workload at <= 2 device dispatches per engine step."""
+        cfg, params = _prop_model()
+        spec = WorkloadSpec(
+            arrival_rate=0.0, num_requests=n,
+            prompt_len=LengthDist(kind="lognormal", mean=14.0, low=2,
+                                  high=40),
+            output_len=LengthDist(kind="uniform", low=1, high=7),
+            temperature=0.7, top_k=8, seed=seed,
+        )
+        eng = ServingEngine(cfg, params, max_batch=3, max_len=64,
+                            prompt_bucket=8, cache_layout=layout,
+                            prefill_chunk=chunk,
+                            prefill_budget=chunk * budget_mult)
+        for a in poisson_trace(spec, cfg.vocab_size):
+            eng.submit(a.prompt, a.params)
+        eng.run()
+        assert eng._dispatch_samples and max(eng._dispatch_samples) <= 2
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_dispatch_bound_invariant():
+        pass
