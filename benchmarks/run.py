@@ -14,8 +14,8 @@ import time
 from typing import List
 
 from benchmarks import (kernel_bench, measured_cpu, roofline, serving_bench,
-                        table2_size, table3_latency_energy, table4_jetson,
-                        trace_demo)
+                        speculative_bench, table2_size, table3_latency_energy,
+                        table4_jetson, trace_demo)
 
 MODULES = {
     "table2": table2_size,            # paper Table 2
@@ -25,6 +25,7 @@ MODULES = {
     "measured": measured_cpu,         # §2.3/2.4 measured mode
     "kernels": kernel_bench,          # Pallas kernel reference timings
     "serving": serving_bench,         # fused vs per-slot decode loop
+    "speculative": speculative_bench,  # prompt-lookup drafting vs plain decode
     "roofline": roofline,             # assignment §Roofline (from dry-run JSONs)
 }
 

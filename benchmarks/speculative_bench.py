@@ -1,0 +1,23 @@
+"""Speculative-decoding benchmark entry point.
+
+The section itself lives in ``serving_bench`` (it shares that module's
+engine/workload plumbing); this thin module gives it its own harness key
+so ``--only speculative`` runs just the speculative row — without the
+full serving suite re-running it.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from benchmarks import serving_bench
+from repro.configs import get_config
+from repro.models import model as model_lib
+
+
+def run(csv_rows: List[str]) -> str:
+    cfg = get_config(serving_bench.ARCH, smoke=True)
+    params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
+    return serving_bench._speculative_section(cfg, params, csv_rows)

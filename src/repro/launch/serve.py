@@ -30,8 +30,8 @@ from repro.serving.engine import ServingEngine
 from repro.models import cache as cache_lib
 from repro.serving.workload import (LengthDist, OpenLoopDriver, WorkloadSpec,
                                     bursty_trace, estimate_concurrency,
-                                    poisson_trace, replay_trace,
-                                    shared_prefix_trace)
+                                    lookup_friendly_trace, poisson_trace,
+                                    replay_trace, shared_prefix_trace)
 from repro.sharding import rules
 
 
@@ -140,6 +140,29 @@ def main(argv=None) -> int:
                          "boundaries (better --prefix-cache hit rates; "
                          "token streams differ from 'left' because RoPE "
                          "positions shift)")
+    ap.add_argument("--speculative", default="off",
+                    choices=["off", "lookup"],
+                    help="speculative decoding: 'lookup' drafts each "
+                         "request's next tokens from its own prompt + "
+                         "generated history (prompt-lookup n-grams, no "
+                         "draft model) and verifies the whole window in "
+                         "ONE batched dispatch — token streams stay "
+                         "byte-identical to 'off'; only the tokens-per-"
+                         "dispatch economics change")
+    ap.add_argument("--spec-tokens", type=int, default=4,
+                    help="max draft tokens per verify window with "
+                         "--speculative lookup (the window scores "
+                         "k + 1 positions; see docs/tuning.md for "
+                         "choosing k)")
+    ap.add_argument("--lookup-friendly", action="store_true",
+                    help="generate the self-similar workload speculation "
+                         "thrives on (each prompt is one motif tiled; "
+                         "generation keeps cycling it, so prompt-lookup "
+                         "drafts verify at accept rates near 1)")
+    ap.add_argument("--motif-len", type=int, default=8,
+                    help="motif tokens per --lookup-friendly prompt")
+    ap.add_argument("--motif-repeats", type=int, default=4,
+                    help="times each --lookup-friendly motif is tiled")
     ap.add_argument("--bursty", action="store_true",
                     help="generate the bursty overcommit workload "
                          "(waves of simultaneous arrivals) instead of "
@@ -189,6 +212,12 @@ def main(argv=None) -> int:
             prompt_len=max(int(args.prompt_len_mean), 1),
             max_new=args.max_new, seed=args.seed,
             temperature=args.temperature, top_k=20)[:args.requests]
+    elif args.lookup_friendly:
+        arrivals = lookup_friendly_trace(
+            cfg.vocab_size, num_requests=args.requests,
+            motif_len=args.motif_len, repeats=args.motif_repeats,
+            max_new=args.max_new, arrival_rate=args.arrival_rate,
+            seed=args.seed, temperature=args.temperature, top_k=20)
     elif args.shared_prefix_len > 0:
         arrivals = shared_prefix_trace(
             cfg.vocab_size, num_requests=args.requests,
@@ -228,7 +257,9 @@ def main(argv=None) -> int:
                                prefix_cache=args.prefix_cache,
                                preemption=args.preemption,
                                unified_step=args.unified_step == "on",
-                               pad_side=args.pad_side)
+                               pad_side=args.pad_side,
+                               speculative=args.speculative,
+                               spec_tokens=args.spec_tokens)
         driver = OpenLoopDriver(engine, arrivals)
         if reader is not None:
             monitor = PowerMonitor(reader)

@@ -162,6 +162,7 @@ def apply_attention_prefill_chunk(
     window: int = 0,
     block_tables: Optional[jax.Array] = None,
     valid: Optional[jax.Array] = None,
+    overwrite_from: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Dict]:
     """Chunked prefill: the chunk attends to every cached chunk 0..N-1 plus
     itself (causally), then its K/V is appended for chunks N+1.. and decode.
@@ -176,6 +177,17 @@ def apply_attention_prefill_chunk(
     pad columns write nothing (paged: routed to the garbage block, whose
     logical positions are acausal; contiguous: key positions forced to -1)
     and their query outputs are garbage the caller discards.
+
+    ``overwrite_from`` (B,) int32, when given, hides *cached* contiguous
+    entries at positions >= the row's value from the attention read.  The
+    speculative verify step re-writes positions its previous window already
+    wrote (rejected draft suffixes are never physically rolled back): the
+    stale entries share the chunk's own positions, and without the mask the
+    contiguous branch — which attends over cache-before-append ++ chunk —
+    would both attend to garbage and double-count the overlap.  The paged
+    branch needs no mask: it appends *first*, so the overlap is overwritten
+    in the pool before the gather, and stale positions beyond the window
+    exceed every query position (causal masking hides them).
     """
     q = _project_q(p, x, cfg)
     k_new, v_new = _project_kv(p, x, cfg)
@@ -193,7 +205,11 @@ def apply_attention_prefill_chunk(
     k_all = jnp.concatenate([kv_cache["k"].astype(k_new.dtype), k_new], axis=1)
     v_all = jnp.concatenate([kv_cache["v"].astype(v_new.dtype), v_new], axis=1)
     chunk_pos = positions if valid is None else jnp.where(valid, positions, -1)
-    k_pos = jnp.concatenate([kv_cache["pos"], chunk_pos], axis=1)
+    cache_pos = kv_cache["pos"]
+    if overwrite_from is not None:
+        cache_pos = jnp.where(
+            cache_pos >= overwrite_from[:, None], -1, cache_pos)
+    k_pos = jnp.concatenate([cache_pos, chunk_pos], axis=1)
     o = dispatch.flash_attention(
         q, k_all, v_all, q_positions=positions, k_positions=k_pos,
         causal=True, window=window, softcap=cfg.logit_softcap,

@@ -163,6 +163,7 @@ def _apply_block_seq(
     block_tables: Optional[jax.Array] = None,
     chunked: bool = False,
     chunk_valid: Optional[jax.Array] = None,
+    overwrite_from: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Full-sequence block (train / prefill / encoder).
 
@@ -185,7 +186,7 @@ def _apply_block_seq(
                 a, self_cache = attn_lib.apply_attention_prefill_chunk(
                     p["attn"], h, cfg, positions, cache_entry["self"],
                     window=window, block_tables=block_tables,
-                    valid=chunk_valid,
+                    valid=chunk_valid, overwrite_from=overwrite_from,
                 )
             else:
                 a, self_cache = attn_lib.apply_attention_prefill(
@@ -329,6 +330,7 @@ def _apply_stack_seq(
     block_tables: Optional[jax.Array] = None,
     chunked: bool = False,
     chunk_valid: Optional[jax.Array] = None,
+    overwrite_from: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[Dict]]:
     pattern = cfg.block_pattern
     fill = cache is not None
@@ -342,6 +344,7 @@ def _apply_stack_seq(
                 group_params[str(i)], cfg, kind, x, positions, entry, memory,
                 causal=causal, fill_cache=fill, block_tables=block_tables,
                 chunked=chunked, chunk_valid=chunk_valid,
+                overwrite_from=overwrite_from,
             )
             if fill:
                 new_cache[str(i)] = new_entry
@@ -381,6 +384,7 @@ def _apply_stack_seq(
                 stack["rest"][str(i)], cfg, kind, x, positions, entry, memory,
                 causal=causal, fill_cache=fill, block_tables=block_tables,
                 chunked=chunked, chunk_valid=chunk_valid,
+                overwrite_from=overwrite_from,
             )
             if fill:
                 new_rest[str(i)] = new_entry
@@ -573,6 +577,8 @@ def prefill_chunk(
     cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
     start: jax.Array, *, block_tables: Optional[jax.Array] = None,
     lengths: Optional[jax.Array] = None,
+    overwrite_from: Optional[jax.Array] = None,
+    all_logits: bool = False,
 ) -> Tuple[jax.Array, Dict]:
     """Process one prompt chunk (positions ``start..start+C-1``) against a
     cache already holding chunks for positions ``0..start-1``.
@@ -593,6 +599,15 @@ def prefill_chunk(
     only with the ``start == 0`` chunk and offset later chunk starts by
     ``num_vision_tokens`` — mirroring the prefix handling of ``prefill``;
     ``lengths`` is not supported together with a vision prefix.
+
+    The speculative verify step reuses this multi-token path to score a
+    draft window against the live cache: ``overwrite_from`` (B,) hides
+    stale contiguous cache entries at positions >= the row's value (a
+    previous window's rejected suffix shares the new window's positions —
+    see ``apply_attention_prefill_chunk``), and ``all_logits=True``
+    returns the full per-position logits (B, C, vocab) instead of each
+    row's last-valid-position row — verification needs the target
+    distribution *at every window position*, not just the final one.
     """
     x = _embed_inputs(cfg, params, batch)
     start = jnp.asarray(start, jnp.int32)
@@ -618,8 +633,12 @@ def prefill_chunk(
     x, new_cache = _apply_stack_seq(
         params["decoder"], cfg, x, positions, cache, memory,
         causal=True, remat=False, block_tables=block_tables, chunked=True,
-        chunk_valid=valid,
+        chunk_valid=valid, overwrite_from=overwrite_from,
     )
+    if all_logits:
+        logits = unembed(params.get("lm_head", params["embed"]), x,
+                         cfg.logit_softcap)
+        return logits, new_cache
     if lengths is None:
         x_last = x[:, -1:]
     else:

@@ -38,9 +38,43 @@ from repro.models.config import ModelConfig
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.step import (init_slot_state, invalidate_slot,
                                 make_decode_sample_step, make_engine_step,
-                                maybe_donate)
+                                make_spec_decode_step, maybe_donate)
 
 _RING = 64  # host-side token ring buffer depth (tokens per slot per flush)
+
+
+def prompt_lookup_draft(hist: List[int], k: int,
+                        ngram_max: int = 3) -> List[int]:
+    """Draft-free speculative drafting by prompt lookup: propose the ``k``
+    tokens that followed an earlier occurrence of the stream's trailing
+    n-gram (longest n first, ``ngram_max`` down to 1).
+
+    Among the occurrences of the longest matching n-gram, the most recent
+    one with a full ``k``-token continuation wins (recent context best
+    predicts a loop or a template being re-instantiated); if every match
+    sits too close to the end for ``k`` tokens, the longest available
+    continuation wins instead.  Returns ``[]`` when nothing matches — the
+    verify step then degrades to a plain one-token decode.  Draft content
+    only ever affects how many tokens a verify dispatch may emit, never
+    *which* tokens, so this heuristic is pure performance tuning."""
+    L = len(hist)
+    if k <= 0 or L < 2:
+        return []
+    for n in range(min(ngram_max, L - 1), 0, -1):
+        pat = hist[L - n:]
+        best = None  # (continuation length, match index)
+        for i in range(L - n - 1, -1, -1):
+            if hist[i:i + n] == pat:
+                c = min(k, L - i - n)
+                if c == k:
+                    best = (c, i)
+                    break
+                if best is None or c > best[0]:
+                    best = (c, i)
+        if best is not None:
+            c, i = best
+            return hist[i + n:i + n + c]
+    return []
 
 
 @dataclasses.dataclass
@@ -77,7 +111,12 @@ class Request:
 
     @property
     def tpot_s(self) -> float:
-        n = max(len(self.output_tokens) - 1, 1)
+        # a request that emitted <= 1 token has no inter-token interval,
+        # and one that never started/finished has meaningless timestamps —
+        # report 0.0 instead of dividing into garbage
+        n = len(self.output_tokens) - 1
+        if n <= 0 or self.finish_time <= self.first_token_time:
+            return 0.0
         return (self.finish_time - self.first_token_time) / n
 
 
@@ -129,10 +168,30 @@ class ServingEngine:
         preemption: str = "off",
         unified_step: bool = True,
         pad_side: str = "left",
+        speculative: str = "off",
+        spec_tokens: int = 4,
     ):
         assert cache_layout in ("contiguous", "paged"), cache_layout
         assert preemption in ("off", "recompute"), preemption
         assert pad_side in ("left", "right"), pad_side
+        if speculative not in ("off", "lookup"):
+            raise ValueError(
+                f"speculative must be 'off' or 'lookup', got {speculative!r}")
+        self.speculative = speculative
+        self.spec_k = int(spec_tokens) if speculative != "off" else 0
+        if speculative != "off":
+            if self.spec_k < 1:
+                raise ValueError(
+                    f"--spec-tokens={spec_tokens} must be >= 1 when "
+                    f"--speculative is on")
+            bad = sorted({k for k in cfg.blocks() if k not in ("attn", "ffn")})
+            if bad or cfg.is_encdec or cfg.num_vision_tokens:
+                raise ValueError(
+                    f"speculative='lookup' relies on rejected draft "
+                    f"suffixes being re-writable cache positions, which "
+                    f"only full-attention KV supports; {cfg.name!r} "
+                    f"carries per-slot state that cannot rewind "
+                    f"({', '.join(bad) or 'cross-attention/vision prefix'})")
         if pad_side == "right" and (cfg.is_encdec or cfg.num_vision_tokens):
             raise ValueError(
                 f"pad_side='right' realigns the bucketed prompt row so "
@@ -233,6 +292,17 @@ class ServingEngine:
         # per-step deltas feed the dispatches_per_step percentiles
         self._dispatches = 0
         self._dispatch_samples: List[int] = []
+        # decode-side economics: device-emitted decode tokens over the
+        # dispatches that carried them (speculation pushes the ratio past
+        # the batch size), plus drafter accounting for the accept rate
+        self._decode_tokens = 0
+        self._decode_dispatches = 0
+        self._drafted_tokens = 0
+        self._accepted_tokens = 0
+        self._spec_verifies = 0
+        # host mirror of each slot's uploaded draft length: block growth
+        # must cover the verify window's cache writes, not just next_pos
+        self._draft_len_host = np.zeros(max_batch, np.int64)
         self._steps_done = 0
         self._steps_t0: Optional[float] = None
         self._steps_t1 = 0.0
@@ -261,9 +331,16 @@ class ServingEngine:
         # into the step on backends that support it)
         self._state = init_slot_state(
             max_batch, seed=seed + 1,
-            max_blocks=self.max_blocks_per_slot if cache_layout == "paged" else 0)
-        self._step = self._counted(maybe_donate(
-            make_decode_sample_step(cfg, max_len, k_max=self.top_k_max), (1, 2)))
+            max_blocks=self.max_blocks_per_slot if cache_layout == "paged" else 0,
+            spec_k=self.spec_k)
+        if self.spec_k:
+            self._step = self._counted(maybe_donate(
+                make_spec_decode_step(cfg, max_len, k_max=self.top_k_max,
+                                      spec_k=self.spec_k), (1, 2)))
+        else:
+            self._step = self._counted(maybe_donate(
+                make_decode_sample_step(cfg, max_len, k_max=self.top_k_max),
+                (1, 2)))
         # unified mixed prefill/decode step: one dispatch advances the whole
         # packed cursor frontier AND decodes every armed slot.  Not taken
         # for encoder-decoder / vision configs (their prefix embeddings ride
@@ -275,7 +352,8 @@ class ServingEngine:
             # work, and no cursor can hold more than max_len - 1 tokens
             self._chunk_width = min(self.chunk_budget, max(max_len - 1, 1))
             self._unified = self._counted(maybe_donate(
-                make_engine_step(cfg, max_len, k_max=self.top_k_max), (1, 3)))
+                make_engine_step(cfg, max_len, k_max=self.top_k_max,
+                                 spec_k=self.spec_k), (1, 3)))
         # admission prefill: the n-row cache template is built *inside* the
         # jitted function (from the traced batch shape), so its zeros are
         # materialized on demand by XLA instead of living as per-batch-size
@@ -373,10 +451,14 @@ class ServingEngine:
         self._flush_resets()  # one batched row-reset dispatch per step
         if self.unified:
             frontier = self._pick_frontier()
+            if self.spec_k:
+                self._arm_drafts()
             self._grow_decode_blocks()
             self._unified_once(frontier)
         else:
             self._advance_chunks()
+            if self.spec_k:
+                self._arm_drafts()
             self._grow_decode_blocks()
             self._decode_once()
         if self.layout == "paged":
@@ -888,7 +970,99 @@ class ServingEngine:
                     self._start_decoding(cur.req, slot, cur.plen,
                                          logits_np[slot:slot + 1],
                                          cur.tables_np)
-        self._process_decode_out(out_np)
+        self._process_out(out_np)
+
+    # -- speculative decoding ----------------------------------------------------
+    def _arm_drafts(self) -> None:
+        """Upload each decoding slot's prompt-lookup draft for this step's
+        verify dispatch.  Drafting is pure host work over tokens the
+        request already owns (prompt + emitted, including the unflushed
+        ring tail), so it costs no device dispatch.  The draft length is
+        clamped so the verify window — which writes K/V at the last
+        emitted token's pending position plus one per draft token, and may
+        emit up to ``draft_len + 1`` tokens — can never outrun the
+        request's new-token budget or the cache length bound.  Both
+        arrays are rebuilt from zero every step, so a slot that was
+        re-armed, preempted, or finished can never replay a stale draft."""
+        K = self.spec_k
+        draft_np = np.zeros((self.max_batch, K), np.int32)
+        self._draft_len_host[:] = 0
+        for slot in range(self.max_batch):
+            req = self.slots[slot]
+            if req is None or self._cursors[slot] is not None:
+                continue
+            n_ring = int(self._ring_n[slot])
+            emitted = len(req.output_tokens) + n_ring
+            p = int(self._next_pos[slot])
+            cap = min(K, req.params.max_new_tokens - emitted - 1,
+                      self.max_len - 2 - p)
+            if cap <= 0:
+                continue
+            hist = ([int(t) for t in req.prompt] + req.output_tokens
+                    + [int(t) for t in self._ring[slot, :n_ring]])
+            d = prompt_lookup_draft(hist, cap)
+            if not d:
+                continue
+            draft_np[slot, :len(d)] = d
+            self._draft_len_host[slot] = len(d)
+            self._drafted_tokens += len(d)
+        self._state["draft"] = jnp.asarray(draft_np)
+        self._state["draft_len"] = jnp.asarray(
+            self._draft_len_host.astype(np.int32))
+
+    def _process_spec_out(self, out_np: np.ndarray) -> None:
+        """Host-side bookkeeping of one verify's packed (B, 2*(k+1)+1)
+        output: per slot, the emission mask is a prefix of the window
+        (the acceptance chain only ever shuts off), so the first ``n``
+        token columns are the slot's emitted tokens in stream order."""
+        K1 = self.spec_k + 1
+        tokens = out_np[:, :K1]
+        emit = out_np[:, K1:2 * K1]
+        done = out_np[:, 2 * K1]
+        any_emit = False
+        for slot in range(self.max_batch):
+            req = self.slots[slot]
+            n = int(emit[slot].sum())
+            if req is None or n == 0:
+                continue  # idle slot, or freed on the host side
+            any_emit = True
+            self._spec_verifies += 1
+            self._accepted_tokens += n - 1
+            self._decode_tokens += n
+            for i in range(n):
+                self._next_pos[slot] += 1  # the device wrote K/V there
+                rn = int(self._ring_n[slot])
+                self._ring[slot, rn] = tokens[slot, i]
+                self._ring_n[slot] = rn + 1
+                if rn + 1 == _RING:
+                    self._flush_ring(slot)
+                self._count_token(req)
+            if done[slot]:
+                self._finish(slot)
+            elif self.preemption != "off":
+                self._rollback_spec_blocks(slot)
+        if any_emit:
+            self._decode_dispatches += 1
+
+    def _rollback_spec_blocks(self, slot: int) -> None:
+        """Free the lazily grown blocks a rejected draft suffix no longer
+        needs (``preemption="recompute"`` only — with up-front reservation
+        the window never grew past the admission grant).  The rejected
+        K/V itself is never rolled back: entries within the next window's
+        span are overwritten before they are read, entries beyond it sit
+        at positions above every query and are causally masked, and a
+        freed block handed to another request exposes only positions that
+        request has not reached yet."""
+        keep = int(self._next_pos[slot]) // self.block_size + 1
+        blocks = self._slot_blocks[slot]
+        if len(blocks) <= keep:
+            return
+        extra = blocks[keep:]
+        self._slot_blocks[slot] = blocks[:keep]
+        self._pool.free(extra)
+        self._state["block_tables"] = (
+            self._state["block_tables"].at[slot, keep:keep + len(extra)].set(
+                cache_lib.GARBAGE_BLOCK))
 
     # -- preemption + recompute ------------------------------------------------
     def _grow_decode_blocks(self) -> None:
@@ -907,7 +1081,10 @@ class ServingEngine:
             req = self.slots[slot]
             if req is None or self._cursors[slot] is not None:
                 continue
-            need = int(self._next_pos[slot]) // bs + 1
+            # the verify window writes draft_len positions past next_pos,
+            # so speculative growth must cover the whole window up front
+            need = (int(self._next_pos[slot])
+                    + int(self._draft_len_host[slot])) // bs + 1
             while len(self._slot_blocks[slot]) < need:
                 if self.slots[slot] is not req:
                     break  # the growing slot itself was preempted
@@ -1170,16 +1347,27 @@ class ServingEngine:
             return
         self._state, self.cache, out = self._step(
             self.params, self._state, self.cache)
-        self._process_decode_out(np.asarray(out))  # single host sync
+        self._process_out(np.asarray(out))  # single host sync
+
+    def _process_out(self, out_np: np.ndarray) -> None:
+        """Route one step's packed device sync to the right parser: the
+        (3, B) decode sync or the (B, 2*(k+1)+1) speculative verify sync."""
+        if self.spec_k:
+            self._process_spec_out(out_np)
+        else:
+            self._process_decode_out(out_np)
 
     def _process_decode_out(self, out_np: np.ndarray) -> None:
         """Host-side bookkeeping of one decode's packed (3, B) output
         (shared by the split and unified step paths)."""
         tokens, done, emitted = out_np[0], out_np[1], out_np[2]
+        any_emit = False
         for slot in np.nonzero(emitted)[0]:
             req = self.slots[slot]
             if req is None:
                 continue  # stale flag for a slot freed on the host side
+            any_emit = True
+            self._decode_tokens += 1
             self._next_pos[slot] += 1  # the device wrote K/V there
             n = int(self._ring_n[slot])
             self._ring[slot, n] = tokens[slot]
@@ -1189,6 +1377,8 @@ class ServingEngine:
             self._count_token(req)
             if done[slot]:
                 self._finish(slot)
+        if any_emit:
+            self._decode_dispatches += 1
 
     def _flush_ring(self, slot: int) -> None:
         n = int(self._ring_n[slot])
@@ -1290,11 +1480,20 @@ class ServingEngine:
         t_first = min(r.submit_time for r in self.finished)
         t_last = max(r.finish_time for r in self.finished)
         span = max(t_last - t_first, 1e-9)
+        # decode vs prefill throughput: emitted tokens and processed prompt
+        # tokens over the same request span (prompts are clipped to the
+        # computed extent, matching what the prefill path actually ran)
+        prefill_tokens = sum(min(len(r.prompt), self.max_len - 1)
+                             for r in self.finished)
         summary = {
             "requests": len(self.finished),
             "truncated": sum(1 for r in self.finished if r.truncated),
             "output_tokens": out_tokens,
             "tokens_per_sec": out_tokens / span,
+            "decode_tokens_per_sec": out_tokens / span,
+            "prefill_tokens_per_sec": prefill_tokens / span,
+            "tokens_per_dispatch": (
+                self._decode_tokens / max(self._decode_dispatches, 1)),
             "ttft_ms": mean(ttfts) * 1e3,
             "tpot_ms": mean(tpots) * 1e3,
             "ttlt_ms": mean(ttlts) * 1e3,
@@ -1311,6 +1510,11 @@ class ServingEngine:
                 self._dispatch_samples, 50)
             summary["dispatches_per_step_p95"] = _percentile(
                 self._dispatch_samples, 95)
+        if self.spec_k:
+            summary["drafted_tokens"] = self._drafted_tokens
+            summary["accepted_tokens"] = self._accepted_tokens
+            summary["spec_accept_rate"] = (
+                self._accepted_tokens / max(self._drafted_tokens, 1))
         if self.layout == "paged":
             summary["preemptions"] = self.preemptions
             summary["recompute_tokens"] = self.recompute_tokens
@@ -1333,6 +1537,7 @@ class ServingEngine:
         if self.monitor is not None:
             total_j = sum(r.joules for r in self.finished)
             summary["joules_total"] = total_j
-            summary["joules_per_request"] = total_j / len(self.finished)
+            summary["joules_per_request"] = total_j / max(
+                len(self.finished), 1)
             summary["joules_per_token"] = total_j / max(out_tokens, 1)
         return summary

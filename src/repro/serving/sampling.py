@@ -106,6 +106,78 @@ def sample_slots_keyed(
     return jnp.where(temperature <= 0.0, greedy, sampled)
 
 
+def verify_slots_keyed(
+    logits: jax.Array,       # (B, K+1, V) per-position target logits
+    draft: jax.Array,        # (B, K) int32 drafted continuation tokens
+    draft_len: jax.Array,    # (B,) int32 valid draft tokens per slot
+    temperature: jax.Array,  # (B,) float32 (<= 0 -> greedy)
+    top_k: jax.Array,        # (B,) int32 (0 -> no filter)
+    keys: jax.Array,         # (B, 2) uint32 per-slot PRNG chains
+    *,
+    active: jax.Array,       # (B,) bool — slot is verifying this step
+    tokens0: jax.Array,      # (B,) int32 frozen fallback token (last emitted)
+    positions: jax.Array,    # (B,) int32 position of the last emitted token
+    remaining: jax.Array,    # (B,) int32 new-token budget left
+    eos: jax.Array,          # (B,) int32 per-slot EOS id (-1 = never)
+    max_len: int,
+    k_max: int = 64,
+) -> dict:
+    """Scheduling-invariant speculative acceptance: the unrolled emission
+    chain over a verified draft window.
+
+    ``logits[:, i]`` is the target model's next-token distribution after
+    consuming window input ``i`` (input 0 is the slot's last emitted token,
+    inputs 1..K its drafted continuation).  Position 0 always emits: its
+    sample is drawn exactly as the plain decode step would (one key split,
+    ``sample_slots_keyed`` on the split), so the first emitted token per
+    verify matches the non-speculative stream by construction.  The chain
+    then *continues* to position ``i`` only while every earlier sample
+    equalled the draft token fed as the next input — the verified logits
+    row is the true target distribution precisely when the input prefix
+    matches the emitted stream.  The emitted token is always the target
+    sample (never the draft), so both greedy and sampled streams are
+    byte-identical to non-speculative decoding: acceptance only decides
+    how *many* chain-correct samples one dispatch may emit (emitted =
+    accepted draft tokens + 1 bonus).  Each emitted token advances the
+    slot's position/budget and splits its PRNG chain once — the same
+    per-emitted-token discipline as ``_decode_sample_body`` — and EOS /
+    budget / length exhaustion cuts the chain mid-window exactly where a
+    step-at-a-time decode would have stopped.
+    """
+    B, K1, _ = logits.shape
+    cont = active
+    tok = tokens0
+    done = jnp.zeros_like(active)
+    done_any = jnp.zeros_like(active)
+    tok_cols, emit_cols = [], []
+    for i in range(K1):
+        if i > 0:
+            cont = cont & ~done & (i <= draft_len) & (tok == draft[:, i - 1])
+        split = jax.vmap(jax.random.split)(keys)     # (B, 2, 2)
+        drawn = sample_slots_keyed(logits[:, i], temperature, top_k,
+                                   split[:, 0], k_max=k_max)
+        tok = jnp.where(cont, drawn, tok)
+        ci = cont.astype(jnp.int32)
+        positions = positions + ci
+        remaining = remaining - ci
+        hit_eos = (eos >= 0) & (tok == eos)
+        done = cont & (hit_eos | (remaining <= 0) | (positions >= max_len - 1))
+        keys = jnp.where(cont[:, None], split[:, 1], keys)
+        done_any = done_any | done
+        tok_cols.append(tok)
+        emit_cols.append(cont)
+    return {
+        "tokens": jnp.stack(tok_cols, axis=1),     # (B, K+1) emitted tokens
+        "emit": jnp.stack(emit_cols, axis=1),      # (B, K+1) emission mask
+        "done": done_any,                          # (B,) finished mid-window
+        "last_token": tok,                         # (B,) next verify input
+        "positions": positions,
+        "remaining": remaining,
+        "keys": keys,
+        "active": active & ~done_any,
+    }
+
+
 def params_as_arrays(params: SamplingParams):
     """(temperature, top_k, eos, max_new) numpy scalars for one slot."""
     return (

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
-from repro.serving.sampling import sample_slots_keyed
+from repro.serving.sampling import sample_slots_keyed, verify_slots_keyed
 
 
 def make_prefill_step(cfg: ModelConfig) -> Callable:
@@ -44,7 +44,7 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
 
 
 def init_slot_state(max_batch: int, seed: int = 0,
-                    max_blocks: int = 0) -> Dict[str, jax.Array]:
+                    max_blocks: int = 0, spec_k: int = 0) -> Dict[str, jax.Array]:
     """Device-resident per-slot scheduler state for ``decode_sample_step``.
 
     tokens       (B, 1) int32  — next input token per slot
@@ -60,6 +60,10 @@ def init_slot_state(max_batch: int, seed: int = 0,
                  independent of scheduling)
     block_tables (B, max_blocks) int32 — paged layout only (max_blocks > 0):
                  pool block per (slot, logical block); 0 = garbage block
+    draft        (B, spec_k) int32 — speculative engines only (spec_k > 0):
+                 the host drafter's proposed continuation tokens, replaced
+                 wholesale before every verify dispatch
+    draft_len    (B,)   int32  — valid leading draft tokens per slot
     """
     B = max_batch
     base = jax.random.PRNGKey(seed)
@@ -75,6 +79,9 @@ def init_slot_state(max_batch: int, seed: int = 0,
     }
     if max_blocks > 0:
         state["block_tables"] = jnp.zeros((B, max_blocks), jnp.int32)
+    if spec_k > 0:
+        state["draft"] = jnp.zeros((B, spec_k), jnp.int32)
+        state["draft_len"] = jnp.zeros((B,), jnp.int32)
     return state
 
 
@@ -172,8 +179,69 @@ def _decode_sample_body(cfg: ModelConfig, max_len: int, k_max: int,
     return new_state, new_cache, out
 
 
+def _spec_verify_body(cfg: ModelConfig, max_len: int, k_max: int, spec_k: int,
+                      params, state: Dict[str, jax.Array], cache):
+    """Speculative decode: ONE batched multi-token forward scores every
+    slot's draft window, then the unrolled acceptance chain emits 1 +
+    accepted tokens per slot.
+
+    The verify forward *is* the PR 6 length-masked chunk path: each slot's
+    window ``[last_token, draft...]`` rides as a ragged (B, spec_k + 1) row
+    (``lengths = draft_len + 1`` for active slots, 0 for idle/prefilling
+    ones, whose rows write nothing), starting at the slot's next cache
+    write position.  Window K/V is appended where it is computed — accepted
+    positions hold exactly the K/V a step-at-a-time decode would have
+    written; a rejected suffix's entries are simply re-written by the next
+    window (``overwrite_from`` hides them from the contiguous attention
+    read in the meantime, and paged reads causally mask them).  Returns
+    ``(state', cache', out)`` with ``out`` a packed (B, 2 * (spec_k + 1) +
+    1) int32 sync: emitted tokens | emission mask | finished flag.
+    """
+    active = state["active"]
+    window = jnp.concatenate([state["tokens"], state["draft"]], axis=1)
+    lengths = jnp.where(active, state["draft_len"] + 1, 0)
+    logits, new_cache = model_lib.prefill_chunk(
+        cfg, params, {"tokens": window}, cache, state["positions"],
+        block_tables=state.get("block_tables"), lengths=lengths,
+        overwrite_from=state["positions"], all_logits=True)
+    res = verify_slots_keyed(
+        logits, state["draft"], state["draft_len"], state["temperature"],
+        state["top_k"], state["keys"], active=active,
+        tokens0=state["tokens"][:, 0], positions=state["positions"],
+        remaining=state["remaining"], eos=state["eos"],
+        max_len=max_len, k_max=k_max)
+    new_state = dict(state)  # block_tables / draft ride through untouched
+    new_state.update(
+        tokens=res["last_token"][:, None],
+        positions=res["positions"],
+        active=res["active"],
+        remaining=res["remaining"],
+        keys=res["keys"],
+    )
+    out = jnp.concatenate([
+        res["tokens"],
+        res["emit"].astype(jnp.int32),
+        res["done"].astype(jnp.int32)[:, None],
+    ], axis=1)
+    return new_state, new_cache, out
+
+
+def make_spec_decode_step(cfg: ModelConfig, max_len: int, k_max: int = 64,
+                          spec_k: int = 4) -> Callable:
+    """Fused speculative verify + accept + finish-detect step: the
+    drop-in replacement for ``make_decode_sample_step`` when the engine
+    runs with prompt-lookup drafting (``out`` is the packed spec sync of
+    ``_spec_verify_body`` instead of the (3, B) decode sync)."""
+
+    def step(params, state: Dict[str, jax.Array], cache):
+        return _spec_verify_body(cfg, max_len, k_max, spec_k,
+                                 params, state, cache)
+
+    return step
+
+
 def make_engine_step(cfg: ModelConfig, max_len: int,
-                     k_max: int = 64) -> Callable:
+                     k_max: int = 64, spec_k: int = 0) -> Callable:
     """The unified mixed prefill/decode step: ONE jitted device dispatch per
     engine step, however many prefill cursors are in flight.
 
@@ -197,6 +265,11 @@ def make_engine_step(cfg: ModelConfig, max_len: int,
     and ignored).  A prefilling slot is inactive in ``state``, so the
     decode half's ``update_mask`` keeps it from disturbing the freshly
     appended chunk K/V — same invariant as the split path.
+
+    ``spec_k > 0`` swaps the decode half for the speculative verify body
+    (``_spec_verify_body``): the frontier advance and the batched draft
+    verification stay ONE fused dispatch, so speculation preserves the
+    <= 2 dispatches/step bound; ``out`` becomes the packed spec sync.
     """
 
     def step(params, state: Dict[str, jax.Array], chunk: Dict[str, jax.Array],
@@ -204,8 +277,12 @@ def make_engine_step(cfg: ModelConfig, max_len: int,
         chunk_logits, cache = model_lib.prefill_chunk(
             cfg, params, {"tokens": chunk["tokens"]}, cache, chunk["start"],
             block_tables=state.get("block_tables"), lengths=chunk["length"])
-        new_state, new_cache, out = _decode_sample_body(
-            cfg, max_len, k_max, params, state, cache)
+        if spec_k > 0:
+            new_state, new_cache, out = _spec_verify_body(
+                cfg, max_len, k_max, spec_k, params, state, cache)
+        else:
+            new_state, new_cache, out = _decode_sample_body(
+                cfg, max_len, k_max, params, state, cache)
         return new_state, new_cache, out, chunk_logits
 
     return step

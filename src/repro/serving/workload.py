@@ -233,6 +233,45 @@ def bursty_trace(
     return arrivals
 
 
+def lookup_friendly_trace(
+    vocab_size: int,
+    *,
+    num_requests: int = 8,
+    motif_len: int = 8,
+    repeats: int = 4,
+    max_new: int = 32,
+    arrival_rate: float = 0.0,
+    seed: int = 0,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    eos_token: int = -1,
+) -> List[Arrival]:
+    """The prompt-lookup speculative-decoding showcase: each prompt is one
+    random ``motif_len``-token motif tiled ``repeats`` times.  A model
+    continuing such a prompt tends to keep cycling the motif (greedy
+    decode on self-similar context collapses into the loop), and every
+    generated token's trailing n-gram then re-occurs earlier in the
+    stream — exactly what ``speculative="lookup"`` drafts from, so accept
+    rates approach 1 and one verify dispatch emits whole motif stretches.
+    Structurally repetitive prompts like this stand in for the
+    summarize/extract/code-edit workloads where the output quotes its
+    input.  Arrivals are Poisson at ``arrival_rate`` (all at t=0 when 0);
+    same arguments, same trace."""
+    rng = np.random.default_rng(seed)
+    arrivals: List[Arrival] = []
+    t = 0.0
+    for _ in range(num_requests):
+        if arrival_rate > 0:
+            t += float(rng.exponential(1.0 / arrival_rate))
+        motif = rng.integers(0, vocab_size, motif_len).astype(np.int32)
+        arrivals.append(Arrival(
+            time_s=t, prompt=np.tile(motif, repeats),
+            params=SamplingParams(temperature=temperature, top_k=top_k,
+                                  eos_token=eos_token,
+                                  max_new_tokens=max_new)))
+    return arrivals
+
+
 def estimate_concurrency(arrivals: Sequence[Arrival], max_batch: int,
                          q: float = 95.0) -> int:
     """p-th percentile of the in-flight request count a trace implies,

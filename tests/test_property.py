@@ -316,6 +316,56 @@ def test_prefix_cache_invariants(seed, chunk, n, pool_extra):
     assert all(not b for b in eng._slot_blocks)
 
 
+# -- speculative decoding: economics invariants --------------------------------
+
+@pytest.mark.speculative
+@given(
+    seed=st.integers(0, 2**16),
+    k=st.integers(1, 6),
+    n=st.integers(2, 4),
+    spec_on=st.booleans(),
+)
+@settings(max_examples=6, deadline=None)
+def test_speculative_invariants(seed, k, n, spec_on):
+    """Random Poisson workloads x random draft depths x spec on/off: the
+    accept rate stays in [0, 1], every verify dispatch emits exactly its
+    accepted draft tokens plus one bonus sample (emitted == accepted +
+    verifies), tokens/dispatch is >= 1, and the unified chunked engine
+    holds the <= 2 dispatches/step bound with speculation on or off."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.workload import LengthDist, WorkloadSpec, poisson_trace
+
+    cfg, params = _serve_model()
+    spec = WorkloadSpec(
+        arrival_rate=0.0, num_requests=n,
+        prompt_len=LengthDist(kind="uniform", low=2, high=40),
+        output_len=LengthDist(kind="uniform", low=1, high=12),
+        temperature=0.7, top_k=8, seed=seed,
+    )
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8, cache_layout="paged",
+                        kv_block_size=8, prefill_chunk=8, seed=seed,
+                        speculative="lookup" if spec_on else "off",
+                        spec_tokens=k)
+    for a in poisson_trace(spec, cfg.vocab_size):
+        eng.submit(a.prompt, a.params)
+    eng.run()
+    assert len(eng.finished) == n
+    assert max(eng._dispatch_samples) <= 2
+    assert eng._decode_tokens >= eng._decode_dispatches
+    s = eng.latency_summary()
+    assert s["tokens_per_dispatch"] >= 1.0
+    if spec_on:
+        assert 0.0 <= s["spec_accept_rate"] <= 1.0
+        assert s["accepted_tokens"] <= s["drafted_tokens"]
+        assert eng._decode_tokens == (eng._spec_verifies
+                                      + eng._accepted_tokens)
+    else:
+        assert "spec_accept_rate" not in s
+        assert eng._drafted_tokens == 0
+    assert eng.blocks_in_use == 0
+
+
 # -- checkpoint: roundtrip arbitrary nested trees -------------------------------
 
 @given(seed=st.integers(0, 2**16), depth=st.integers(1, 3))

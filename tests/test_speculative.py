@@ -1,0 +1,218 @@
+"""Speculative decoding suite.
+
+The contract under test: prompt-lookup drafting with single-dispatch
+batched verification changes ONLY the step economics (tokens emitted per
+device dispatch), never the tokens.  Across {contiguous, paged} x
+{greedy, sampled} x {chunked, unchunked} x preemption, the speculative
+engine must emit token streams byte-identical to the non-speculative one
+for the same seed — with accepts AND rejections both proven to fire.
+The adversarial-drafter test is the strongest form of the invariant:
+even a drafter that always proposes garbage cannot change the stream,
+because the emitted token is always the target model's own sample and a
+rejected suffix's cache entries are overwritten before they are read.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as model_lib
+from repro.serving import engine as engine_mod
+from repro.serving.engine import ServingEngine, prompt_lookup_draft
+from repro.serving.sampling import SamplingParams
+from repro.serving.workload import (LengthDist, WorkloadSpec,
+                                    lookup_friendly_trace, poisson_trace)
+
+pytestmark = pytest.mark.speculative
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen1.5-0.5b", smoke=True)
+    params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _arrivals(cfg, n=5, temperature=0.0, seed=3, out_hi=24):
+    spec = WorkloadSpec(
+        arrival_rate=0.0, num_requests=n,
+        prompt_len=LengthDist(kind="lognormal", mean=16.0, low=2, high=40),
+        output_len=LengthDist(kind="uniform", low=4, high=out_hi),
+        temperature=temperature, top_k=8, seed=seed,
+    )
+    return poisson_trace(spec, cfg.vocab_size)
+
+
+def _streams(cfg, params, arrivals, *, speculative="off", spec_tokens=4,
+             max_batch=2, **kw):
+    eng = ServingEngine(cfg, params, max_batch=max_batch, max_len=64,
+                        prompt_bucket=8, speculative=speculative,
+                        spec_tokens=spec_tokens, **kw)
+    for a in arrivals:
+        eng.submit(a.prompt, a.params)
+    finished = eng.run()
+    return eng, {r.uid: list(r.output_tokens) for r in finished}
+
+
+# -- the drafter --------------------------------------------------------------
+
+def test_prompt_lookup_draft():
+    """Longest trailing n-gram wins; most recent full-k continuation
+    preferred; no match -> empty draft."""
+    # trailing [1, 2] matches at index 0; continuation is [3, 1, 2]
+    assert prompt_lookup_draft([1, 2, 3, 1, 2], 3) == [3, 1, 2]
+    # the n=3 trailing gram [5,5,5] matches at 0 with just 1 token after it
+    assert prompt_lookup_draft([5, 5, 5, 5], 2) == [5]
+    # two occurrences of [1,2]: the recent one (index 3) has the full-k
+    # continuation and wins over the older one
+    assert prompt_lookup_draft([1, 2, 9, 1, 2, 7, 1, 2], 1,
+                               ngram_max=2) == [7]
+    assert prompt_lookup_draft([1, 2, 3], 2) == []
+    assert prompt_lookup_draft([], 4) == []
+    assert prompt_lookup_draft([1, 2, 3, 1, 2], 0) == []
+
+
+# -- stream equivalence matrix ------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+@pytest.mark.parametrize("chunk", [0, 8])
+def test_speculative_matches_plain(small_model, layout, temperature, chunk):
+    """Speculative streams == non-speculative streams, every layout,
+    greedy and sampled, chunked and unchunked — and drafts actually
+    verify (the equivalence would be vacuous if nothing were accepted)."""
+    cfg, params = small_model
+    arrivals = _arrivals(cfg, temperature=temperature)
+    _, base = _streams(cfg, params, arrivals, cache_layout=layout,
+                       prefill_chunk=chunk)
+    eng, spec = _streams(cfg, params, arrivals, cache_layout=layout,
+                         prefill_chunk=chunk, speculative="lookup")
+    assert spec == base and len(spec) == len(arrivals)
+    s = eng.latency_summary()
+    assert s["drafted_tokens"] > 0
+    assert s["accepted_tokens"] > 0          # accepts fired
+    assert 0.0 <= s["spec_accept_rate"] <= 1.0
+    assert s["tokens_per_dispatch"] > 1.0    # verifies emitted multi-token
+    if layout == "paged":
+        assert eng.blocks_in_use == 0        # every block returned at drain
+
+
+@pytest.mark.parametrize("layout", ["contiguous", "paged"])
+def test_rejections_fire_and_do_not_corrupt(small_model, layout,
+                                            monkeypatch):
+    """An adversarial drafter that always proposes garbage: every draft
+    token is rejected, yet the stream stays byte-identical — the emitted
+    token is always the target sample, and rejected suffixes' cache
+    writes are overwritten/masked before any later read."""
+    cfg, params = small_model
+    arrivals = _arrivals(cfg, temperature=0.7)
+    _, base = _streams(cfg, params, arrivals, cache_layout=layout,
+                       prefill_chunk=8)
+    # tokens the tiny smoke model all but never emits in sequence
+    monkeypatch.setattr(engine_mod, "prompt_lookup_draft",
+                        lambda hist, k, ngram_max=3: [3, 1, 4, 1][:k])
+    eng, spec = _streams(cfg, params, arrivals, cache_layout=layout,
+                         prefill_chunk=8, speculative="lookup")
+    assert spec == base
+    s = eng.latency_summary()
+    assert s["drafted_tokens"] > 0
+    assert s["accepted_tokens"] < s["drafted_tokens"]  # rejections fired
+    assert s["spec_accept_rate"] < 1.0
+
+
+def test_speculative_under_preemption(small_model):
+    """Pool overcommit with lazy growth: the verify window's extra blocks
+    are grown before the dispatch, rejected-suffix blocks are rolled
+    back, preempted requests recompute and resume mid-stream — and the
+    streams still match the non-speculative preempting engine."""
+    cfg, params = small_model
+    arrivals = _arrivals(cfg, temperature=0.7, n=6, seed=11, out_hi=30)
+    kw = dict(cache_layout="paged", prefill_chunk=8,
+              preemption="recompute", kv_num_blocks=10, kv_block_size=8,
+              max_batch=3)
+    _, base = _streams(cfg, params, arrivals, **kw)
+    eng, spec = _streams(cfg, params, arrivals, speculative="lookup", **kw)
+    assert spec == base
+    assert eng.preemptions > 0               # overcommit actually bit
+    assert eng.blocks_in_use == 0
+    assert len(eng._pool.free_stack) == eng.num_blocks - 1
+
+
+def test_speculative_dispatch_bound(small_model):
+    """Speculation preserves the unified step's <= 2 dispatches per engine
+    step (the fused verify replaces the fused decode, 1:1), and the
+    emission accounting balances: every verify emits its accepted tokens
+    plus one bonus sample."""
+    cfg, params = small_model
+    arrivals = _arrivals(cfg, temperature=0.0)
+    eng, _ = _streams(cfg, params, arrivals, cache_layout="paged",
+                      prefill_chunk=8, speculative="lookup")
+    assert max(eng._dispatch_samples) <= 2
+    assert eng._decode_tokens == eng._spec_verifies + eng._accepted_tokens
+
+
+# -- construction-time gating -------------------------------------------------
+
+def test_speculative_validation(small_model):
+    cfg, params = small_model
+    with pytest.raises(ValueError, match="speculative"):
+        ServingEngine(cfg, params, speculative="banana")
+    with pytest.raises(ValueError, match="spec-tokens"):
+        ServingEngine(cfg, params, speculative="lookup", spec_tokens=0)
+    hybrid = get_config("recurrentgemma-2b", smoke=True)
+    hparams, _ = model_lib.init(hybrid, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="rewind"):
+        ServingEngine(hybrid, hparams, speculative="lookup")
+    # speculative='off' ignores spec_tokens and runs the plain step
+    eng = ServingEngine(cfg, params, speculative="off", spec_tokens=0)
+    assert eng.spec_k == 0
+
+
+# -- the showcase workload ----------------------------------------------------
+
+def test_lookup_friendly_trace_accepts(small_model):
+    """The tiled-motif trace is what the drafter thrives on: greedy decode
+    cycles the motif, so accept rates are near-total and one dispatch
+    emits multi-token stretches."""
+    cfg, params = small_model
+    arrivals = lookup_friendly_trace(cfg.vocab_size, num_requests=4,
+                                     motif_len=8, repeats=3, max_new=24)
+    assert all(len(a.prompt) == 24 for a in arrivals)
+    _, base = _streams(cfg, params, arrivals, prefill_chunk=8)
+    eng, spec = _streams(cfg, params, arrivals, prefill_chunk=8,
+                         speculative="lookup", spec_tokens=6)
+    assert spec == base
+    s = eng.latency_summary()
+    assert s["spec_accept_rate"] > 0.5
+    assert s["tokens_per_dispatch"] > 2.0
+
+
+# -- metrics guards (regression) ----------------------------------------------
+
+def test_single_token_request_metrics(small_model):
+    """max_new_tokens=1 used to divide by zero in tpot_s; a finished run
+    with such requests must report tpot 0.0 and finite summary values."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8)
+    eng.submit(np.arange(1, 9, dtype=np.int32),
+               SamplingParams(max_new_tokens=1))
+    finished = eng.run()
+    assert len(finished) == 1
+    assert finished[0].tpot_s == 0.0
+    s = eng.latency_summary()
+    assert np.isfinite(s["tpot_ms"])
+    assert s["output_tokens"] == 1
+
+
+def test_unfinished_request_tpot_is_zero():
+    """A request that never started (or never finished) has meaningless
+    timestamps; tpot_s must not divide them into garbage."""
+    from repro.serving.engine import Request
+    r = Request(uid=0, prompt=np.arange(4, dtype=np.int32))
+    assert r.tpot_s == 0.0
+    r.output_tokens = [1, 2, 3]
+    r.first_token_time = 10.0
+    r.finish_time = 5.0   # corrupt ordering: still no garbage division
+    assert r.tpot_s == 0.0
