@@ -500,6 +500,73 @@ def _mixed_batch_section(cfg, params, csv_rows: List[str]) -> str:
             f"step vs per-chunk dispatches\n\n{md}")
 
 
+def _server_section(cfg, params, csv_rows: List[str]) -> str:
+    """Client-vs-engine steady state: drive the engine through the
+    OpenAI-compatible HTTP front-end with the closed-loop generator and
+    compare the latencies the *client* observed against the engine's own
+    ledger for the same requests.  Gates: the energy ledger must tile
+    exactly (sum of per-request ``joules_between`` windows == run total)
+    and the client-minus-engine TTFT/TPOT deltas must stay within the
+    serving overhead budget — if HTTP + queueing ever costs more than
+    250 ms of TTFT on an idle box, the front-end has rotted."""
+    try:
+        import aiohttp  # noqa: F401
+    except ImportError:
+        return ("## Serving over HTTP: client vs engine steady state\n\n"
+                "(skipped: aiohttp not installed)")
+    import math
+
+    from repro.core.energy import PowerMonitor, SyntheticReader
+    from repro.serving.loadgen import LoadSpec, prewarm_engine, run_load
+    from repro.serving.server import start_http_server
+
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=MAX_LEN,
+                        prefill_chunk=16)
+    mon = PowerMonitor(
+        SyntheticReader(lambda t: 40.0 + 10.0 * math.sin(t * 7.0)),
+        interval_s=0.05)
+    eng.attach_monitor(mon)
+    prewarm_engine(eng, prompt_len=12, concurrency=2,
+                   vocab_size=cfg.vocab_size)
+    handle = start_http_server(eng, model_name=cfg.name)
+    try:
+        spec = LoadSpec(mode="closed", concurrency=2, warmup_s=1.0,
+                        duration_s=2.5, prompt_len=12, max_new=8,
+                        vocab_size=cfg.vocab_size)
+        res = run_load(handle.url, spec, monitor=mon)
+    finally:
+        handle.close()
+    s = res.summary
+    assert s["steady_requests"] >= 2, (
+        f"steady-state window saw only {s['steady_requests']} requests")
+    assert abs(s["joules_attributed"] - s["joules_total"]) <= (
+        1e-9 * max(s["joules_total"], 1.0)), (
+        f"energy ledger drift: {s['joules_attributed']!r} J attributed vs "
+        f"{s['joules_total']!r} J total")
+    assert -1.0 <= s["ttft_client_minus_engine_ms"] <= 250.0, (
+        f"client-vs-engine TTFT delta {s['ttft_client_minus_engine_ms']:.1f}"
+        f" ms out of bounds")
+    assert abs(s["tpot_client_minus_engine_ms"]) <= 50.0, (
+        f"client-vs-engine TPOT delta {s['tpot_client_minus_engine_ms']:.2f}"
+        f" ms out of bounds")
+    rows = [{
+        "requests": int(s["steady_requests"]),
+        "req/s": round(s["achieved_qps"], 1),
+        "client TTFT(ms)": round(s["client_ttft_ms"], 1),
+        "TTFT delta(ms)": round(s["ttft_client_minus_engine_ms"], 1),
+        "client TPOT(ms)": round(s["client_tpot_ms"], 2),
+        "TPOT delta(ms)": round(s["tpot_client_minus_engine_ms"], 2),
+        "J/req": round(s["joules_per_request"], 2),
+        "sample Hz": round(s["power_samples_per_sec"], 1),
+    }]
+    csv_rows.append(
+        f"serving_http_ttft_delta,{s['ttft_client_minus_engine_ms']:.1f},"
+        f"tpot_delta={s['tpot_client_minus_engine_ms']:.2f}ms")
+    return ("## Serving over HTTP: client vs engine steady state "
+            "(closed loop, energy ledger exact)\n\n"
+            + report.to_markdown(rows))
+
+
 def run(csv_rows: List[str]) -> str:
     cfg = get_config(ARCH, smoke=True)
     params, _ = model_lib.init(cfg, jax.random.PRNGKey(0))
@@ -561,4 +628,5 @@ def run(csv_rows: List[str]) -> str:
             + "\n\n" + _mixed_batch_section(cfg, params, csv_rows)
             + "\n\n" + _interference_section(cfg, params, csv_rows)
             + "\n\n" + _prefix_ttft_section(cfg, params, csv_rows)
-            + "\n\n" + _overcommit_section(cfg, params, csv_rows))
+            + "\n\n" + _overcommit_section(cfg, params, csv_rows)
+            + "\n\n" + _server_section(cfg, params, csv_rows))

@@ -23,6 +23,7 @@ import bisect
 import dataclasses
 import threading
 import time
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 
@@ -129,6 +130,12 @@ class EnergyResult:
     joules: float
     samples: List[Tuple[float, List[float]]]  # (t, per-device watts)
     n_devices: int
+    # achieved sampler rate over the window — the >= 5-10 Hz protocol
+    # requirement is verifiable from the result, not assumed
+    samples_per_sec: float = 0.0
+    # reads that raised or returned empty (each leaves a gap the step
+    # function backfills with the previous sample's power)
+    dropped_reads: int = 0
 
     def per(self, count: int) -> float:
         """J/Token, J/Prompt, J/Request — divide by the unit count."""
@@ -175,8 +182,14 @@ class PowerMonitor:
         self._thread: Optional[threading.Thread] = None
         self._t0 = 0.0
         self._t1 = 0.0
+        self.dropped_reads = 0
 
     def _loop(self):
+        # absolute-deadline scheduling: waiting ``interval_s`` *after* each
+        # read lets slow reads (NVML can take ~ms) drift the achieved rate
+        # below target; instead each wait targets t0 + k*interval, so read
+        # latency eats into the idle wait, not the cadence
+        deadline = self._t0 + self.interval_s
         while not self._stop.is_set():
             t = time.perf_counter()
             try:
@@ -185,17 +198,26 @@ class PowerMonitor:
                 watts = []
             if watts:
                 self._samples.append((t, watts))
-            self._stop.wait(self.interval_s)
+            else:
+                # a dropped read leaves a gap the step-function integral
+                # backfills with stale power — count it, don't hide it
+                self.dropped_reads += 1
+            now = time.perf_counter()
+            while deadline <= now:  # reads slower than the interval: skip
+                deadline += self.interval_s
+            self._stop.wait(deadline - now)
 
     def __enter__(self) -> "PowerMonitor":
         self._samples.clear()
+        self.dropped_reads = 0
         self._stop.clear()
         self._t0 = time.perf_counter()
+        self._t1 = 0.0
         # one synchronous sample so even sub-interval windows are covered
         try:
             self._samples.append((self._t0, list(self.reader.read_watts())))
         except Exception:
-            pass
+            self.dropped_reads += 1
         self._thread = threading.Thread(target=self._loop, daemon=True)
         self._thread.start()
         return self
@@ -205,6 +227,12 @@ class PowerMonitor:
         self._stop.set()
         if self._thread is not None:
             self._thread.join(timeout=2.0)
+        if self.dropped_reads:
+            warnings.warn(
+                f"PowerMonitor dropped {self.dropped_reads} power reads "
+                f"(reader raised or returned empty); the step-function "
+                f"integral backfills those gaps with the previous sample",
+                RuntimeWarning, stacklevel=2)
 
     @property
     def window(self) -> Tuple[float, float]:
@@ -217,19 +245,26 @@ class PowerMonitor:
         return integrate_joules(self._samples, t0, t1)
 
     def result(self) -> EnergyResult:
-        duration = max(self._t1 - self._t0, 1e-9)
-        window = [(t, w) for t, w in self._samples if self._t0 <= t <= self._t1 + 1e-3]
+        t0, t1 = self.window
+        duration = max(t1 - t0, 1e-9)
+        window = [(t, w) for t, w in self._samples if t0 <= t <= t1 + 1e-3]
         if not window:
-            window = self._samples[-1:] or [(self._t0, [0.0])]
+            window = self._samples[-1:] or [(t0, [0.0])]
         n_dev = max(len(w) for _, w in window)
-        # average power over the measurement window, summed across devices
-        avg = sum(sum(w) for _, w in window) / len(window)
+        # one ledger: the run total is the same step-function integral
+        # per-request attribution uses (``joules_between``), so tiling the
+        # window with per-request sub-windows reproduces it exactly.  An
+        # unweighted sample mean times the duration disagrees under
+        # sampling jitter — the sub-windows then don't sum to the total.
+        joules = integrate_joules(self._samples, t0, t1)
         return EnergyResult(
             duration_s=duration,
-            avg_watts=avg,
-            joules=avg * duration,
+            avg_watts=joules / duration,
+            joules=joules,
             samples=window,
             n_devices=n_dev,
+            samples_per_sec=len(self._samples) / duration,
+            dropped_reads=self.dropped_reads,
         )
 
 

@@ -63,6 +63,37 @@ def serving_summary_rows(summary: Dict) -> List[Dict]:
     return rows
 
 
+def serving_client_rows(summary: Dict) -> List[Dict]:
+    """Client-side steady-state view (loadgen over the HTTP server):
+    achieved rates, client latencies, client-vs-engine deltas, and the
+    energy ledger for the measured window."""
+    rows = []
+    for key, label in (("steady_requests", "steady-state requests"),
+                       ("steady_window_s", "window (s)"),
+                       ("achieved_qps", "achieved req/s"),
+                       ("client_tokens_per_sec", "client tokens/s"),
+                       ("client_ttft_ms", "client TTFT mean (ms)"),
+                       ("client_ttft_p95_ms", "client TTFT p95 (ms)"),
+                       ("client_tpot_ms", "client TPOT mean (ms)"),
+                       ("client_ttlt_ms", "client TTLT mean (ms)"),
+                       ("ttft_client_minus_engine_ms",
+                        "TTFT client-engine delta (ms)"),
+                       ("tpot_client_minus_engine_ms",
+                        "TPOT client-engine delta (ms)"),
+                       ("joules_total", "window energy (J)"),
+                       ("joules_attributed", "sum of request windows (J)"),
+                       ("joules_per_request", "J/request"),
+                       ("joules_per_token", "J/token"),
+                       ("avg_watts", "avg power (W)"),
+                       ("power_samples_per_sec", "power sample rate (Hz)"),
+                       ("power_reads_dropped", "power reads dropped"),
+                       ("warmup_excluded", "warmup requests excluded"),
+                       ("errors", "client errors")):
+        if key in summary:
+            rows.append({"Metric": label, "value": round(summary[key], 3)})
+    return rows
+
+
 def serving_throughput_rows(summary: Dict) -> List[Dict]:
     """Engine-step economics: how much work each step moved and how many
     device dispatches it took (the unified mixed step targets <= 2)."""
@@ -74,7 +105,9 @@ def serving_throughput_rows(summary: Dict) -> List[Dict]:
                        ("tokens_per_dispatch", "tokens/dispatch"),
                        ("spec_accept_rate", "spec accept rate"),
                        ("drafted_tokens", "drafted tokens"),
-                       ("accepted_tokens", "accepted tokens")):
+                       ("accepted_tokens", "accepted tokens"),
+                       ("power_samples_per_sec", "power sample rate (Hz)"),
+                       ("power_reads_dropped", "power reads dropped")):
         if key in summary:
             rows.append({"Metric": label,
                          "value": round(summary[key], 2)})

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import numpy as np
@@ -77,6 +78,14 @@ def main(argv=None) -> int:
                          "(overrides --arrival-rate)")
     ap.add_argument("--power-reader", default="proc",
                     choices=["proc", "model", "synthetic", "none"])
+    ap.add_argument("--http-port", type=int, default=0,
+                    help="serve over HTTP instead of replaying a trace: "
+                         "start the OpenAI-compatible server (POST "
+                         "/v1/completions with stream=true SSE, /v1/models, "
+                         "/metrics) on this port and run until Ctrl-C "
+                         "(0 = off; workload flags are ignored)")
+    ap.add_argument("--http-host", default="127.0.0.1",
+                    help="bind address for --http-port")
     ap.add_argument("--cache-layout", default="contiguous",
                     choices=["contiguous", "paged"],
                     help="KV layout: worst-case contiguous slots or a "
@@ -260,6 +269,32 @@ def main(argv=None) -> int:
                                pad_side=args.pad_side,
                                speculative=args.speculative,
                                spec_tokens=args.spec_tokens)
+        if args.http_port:
+            from repro.serving.server import start_http_server
+
+            monitor = None
+            if reader is not None:
+                monitor = PowerMonitor(reader)
+                engine.attach_monitor(monitor)
+                monitor.__enter__()
+            handle = start_http_server(engine, host=args.http_host,
+                                       port=args.http_port,
+                                       model_name=cfg.name)
+            print(f"# serving {cfg.name} at {handle.url} "
+                  f"(POST /v1/completions; Ctrl-C to stop)")
+            try:
+                while True:
+                    time.sleep(1.0)
+            except KeyboardInterrupt:
+                pass
+            handle.close()
+            if monitor is not None:
+                monitor.__exit__(None, None, None)
+            summary = handle.server.summary()
+            print(json.dumps(summary, indent=2, default=float))
+            print("\n## Latency percentiles\n")
+            print(report.to_markdown(report.serving_summary_rows(summary)))
+            return 0
         driver = OpenLoopDriver(engine, arrivals)
         if reader is not None:
             monitor = PowerMonitor(reader)

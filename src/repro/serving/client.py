@@ -1,0 +1,132 @@
+"""Async streaming client for the OpenAI-compatible server.
+
+``stream_completion`` drives one ``POST /v1/completions`` with
+``stream=true`` and records the *client-side* view of the request:
+
+* ``send_time``        — just before the HTTP request is written;
+* ``first_chunk_time`` — arrival of the first SSE chunk carrying tokens
+  (the client-observed TTFT edge);
+* ``last_chunk_time``  — arrival of the last token-carrying chunk (the
+  client-observed TTLT edge; the final summary chunk and ``[DONE]``
+  arrive after it and are excluded on purpose).
+
+The final chunk's ``elana`` extension carries the engine's own
+``perf_counter`` stamps for the same request.  ``perf_counter`` is
+CLOCK_MONOTONIC — one clock per machine — so when client and server
+share a host the client/engine deltas are directly meaningful:
+``client_ttft >= engine_ttft`` always, and the gap is exactly the HTTP +
+queueing overhead the serving path adds on top of the engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import AsyncIterator, Dict, List, Sequence, Union
+
+try:  # aiohttp is a dev/serving extra, not a core runtime dependency
+    import aiohttp
+except ImportError:  # pragma: no cover - exercised only without aiohttp
+    aiohttp = None
+
+
+@dataclasses.dataclass
+class ClientRecord:
+    """One streamed request as the client saw it."""
+    send_time: float = 0.0
+    first_chunk_time: float = 0.0
+    last_chunk_time: float = 0.0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    chunks: int = 0
+    finish_reason: str = ""
+    usage: Dict = dataclasses.field(default_factory=dict)
+    engine: Dict = dataclasses.field(default_factory=dict)  # ``elana`` payload
+    joules: float = 0.0       # client-side attributed share (loadgen)
+    error: str = ""
+
+    # -- client-side latencies -------------------------------------------------
+    @property
+    def client_ttft_s(self) -> float:
+        return self.first_chunk_time - self.send_time
+
+    @property
+    def client_ttlt_s(self) -> float:
+        return self.last_chunk_time - self.send_time
+
+    @property
+    def client_tpot_s(self) -> float:
+        n = len(self.tokens)
+        if n < 2:
+            return 0.0
+        return (self.last_chunk_time - self.first_chunk_time) / (n - 1)
+
+    # -- engine-side latencies (from the final chunk's elana payload) ----------
+    @property
+    def engine_ttft_s(self) -> float:
+        return float(self.engine.get("engine_ttft_s") or 0.0)
+
+    @property
+    def engine_tpot_s(self) -> float:
+        return float(self.engine.get("engine_tpot_s") or 0.0)
+
+
+async def sse_data(resp) -> AsyncIterator[str]:
+    """Yield the payload of each ``data:`` line of an SSE response."""
+    async for raw in resp.content:
+        line = raw.strip()
+        if line.startswith(b"data:"):
+            yield line[5:].strip().decode()
+
+
+async def stream_completion(
+    session: "aiohttp.ClientSession", base_url: str,
+    prompt: Union[str, Sequence[int]], *, max_tokens: int = 16,
+    temperature: float = 0.0, top_k: int = 0, eos_token: int = -1,
+    model: str = "elana", timeout_s: float = 300.0,
+) -> ClientRecord:
+    """One streaming completion; never raises — errors land in ``.error``."""
+    rec = ClientRecord()
+    payload = {
+        "model": model,
+        "prompt": list(prompt) if not isinstance(prompt, str) else prompt,
+        "max_tokens": max_tokens,
+        "temperature": temperature,
+        "top_k": top_k,
+        "eos_token": eos_token,
+        "stream": True,
+    }
+    rec.send_time = time.perf_counter()
+    try:
+        async with session.post(
+                f"{base_url}/v1/completions", json=payload,
+                timeout=aiohttp.ClientTimeout(total=timeout_s)) as resp:
+            if resp.status != 200:
+                rec.error = f"HTTP {resp.status}: {await resp.text()}"
+                return rec
+            async for data in sse_data(resp):
+                if data == "[DONE]":
+                    break
+                now = time.perf_counter()
+                obj = json.loads(data)
+                ext = obj.get("elana", {})
+                if "tokens" in ext and obj["choices"][0]["finish_reason"] is None:
+                    if not rec.tokens:
+                        rec.first_chunk_time = now
+                    rec.last_chunk_time = now
+                    rec.tokens.extend(ext["tokens"])
+                    rec.chunks += 1
+                else:  # final chunk: usage + engine-side stamps
+                    rec.finish_reason = obj["choices"][0]["finish_reason"] or ""
+                    rec.usage = obj.get("usage", {})
+                    rec.engine = ext
+    except Exception as e:  # connection reset, timeout, bad JSON ...
+        rec.error = f"{type(e).__name__}: {e}"
+    return rec
+
+
+async def fetch_metrics(session: "aiohttp.ClientSession",
+                        base_url: str) -> Dict:
+    async with session.get(f"{base_url}/metrics") as resp:
+        resp.raise_for_status()
+        return await resp.json()

@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -406,6 +406,12 @@ class ServingEngine:
         self._win_t0: Optional[float] = None
         self._win_tokens: Dict[int, int] = {}
         self.attributed_joules = 0.0
+
+        # token streaming: called from inside the per-step host sync with
+        # (uid, new_tokens, finished) the moment tokens leave the device —
+        # before the ring buffer defers them — so an HTTP front-end can
+        # stream SSE chunks with per-step latency (serving/server.py)
+        self.stream_hook: Optional[Callable[[int, List[int], bool], None]] = None
 
     def _counted(self, fn):
         """Wrap a jitted callable so every launch bumps ``_dispatches``."""
@@ -1037,6 +1043,7 @@ class ServingEngine:
                 if rn + 1 == _RING:
                     self._flush_ring(slot)
                 self._count_token(req)
+            self._notify_stream(req, [int(t) for t in tokens[slot, :n]])
             if done[slot]:
                 self._finish(slot)
             elif self.preemption != "off":
@@ -1245,6 +1252,7 @@ class ServingEngine:
         req.first_token_time = time.perf_counter()
         req.output_tokens.append(first)
         self._count_token(req)
+        self._notify_stream(req, [first])
 
         done = (req.params.max_new_tokens <= 1
                 or (req.params.eos_token >= 0
@@ -1375,10 +1383,20 @@ class ServingEngine:
             if n + 1 == _RING:
                 self._flush_ring(slot)
             self._count_token(req)
+            self._notify_stream(req, [int(tokens[slot])])
             if done[slot]:
                 self._finish(slot)
         if any_emit:
             self._decode_dispatches += 1
+
+    def _notify_stream(self, req: Request, tokens: List[int],
+                       finished: bool = False) -> None:
+        """Push freshly emitted tokens (and the finish edge) to the
+        streaming hook.  Called at emission time — recompute re-admission
+        replays tokens through the *prefill* path, so a preempted request
+        never re-notifies tokens it already streamed."""
+        if self.stream_hook is not None:
+            self.stream_hook(req.uid, tokens, finished)
 
     def _flush_ring(self, slot: int) -> None:
         n = int(self._ring_n[slot])
@@ -1410,6 +1428,9 @@ class ServingEngine:
             self._pool.free(self._slot_blocks[slot])
             self._slot_blocks[slot] = []
         self._flush_energy()
+        # after _flush_energy: the finish notification carries the
+        # request's final joules share with it
+        self._notify_stream(req, [], finished=True)
 
     # -- memory accounting -------------------------------------------------------
     def kv_bytes_in_use(self, peak: bool = False) -> int:
@@ -1540,4 +1561,10 @@ class ServingEngine:
             summary["joules_per_request"] = total_j / max(
                 len(self.finished), 1)
             summary["joules_per_token"] = total_j / max(out_tokens, 1)
+            # achieved sampler health: the >= 5-10 Hz protocol requirement
+            # is verifiable from the summary, and gaps the step function
+            # backfilled with stale power are counted, not hidden
+            res = self.monitor.result()
+            summary["power_samples_per_sec"] = res.samples_per_sec
+            summary["power_reads_dropped"] = res.dropped_reads
         return summary

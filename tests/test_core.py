@@ -113,6 +113,67 @@ def test_power_monitor_window_average():
     assert 30.0 < res.avg_watts < 70.0
 
 
+def test_power_monitor_result_equals_joules_between():
+    """Run-level and per-request energy share one ledger: result() is the
+    same step-function integral joules_between computes, so tiling the
+    window with sub-windows reproduces the total exactly."""
+    reader = energy_lib.SyntheticReader(lambda t: 40.0 + 30.0 * (t % 0.05))
+    with energy_lib.PowerMonitor(reader, interval_s=0.01) as mon:
+        time.sleep(0.2)
+    res = mon.result()
+    t0, t1 = mon.window
+    assert res.joules == mon.joules_between(t0, t1)
+    tm = t0 + (t1 - t0) / 3.0
+    assert mon.joules_between(t0, tm) + mon.joules_between(tm, t1) == (
+        pytest.approx(res.joules, rel=1e-9))
+    assert res.samples_per_sec > 0.0
+
+
+class _FlakyReader(energy_lib.PowerReader):
+    """Raises on every other read."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def read_watts(self):
+        self.calls += 1
+        if self.calls % 2 == 0:
+            raise RuntimeError("transient sensor failure")
+        return [50.0]
+
+
+def test_power_monitor_counts_and_warns_on_dropped_reads():
+    mon = energy_lib.PowerMonitor(_FlakyReader(), interval_s=0.01)
+    with pytest.warns(RuntimeWarning, match="dropped"):
+        with mon:
+            time.sleep(0.15)
+    res = mon.result()
+    assert res.dropped_reads >= 1
+    assert mon.dropped_reads == res.dropped_reads
+    # the good half of the reads still integrates to a sane total
+    assert res.joules == pytest.approx(50.0 * res.duration_s, rel=0.05)
+
+
+class _SlowReader(energy_lib.PowerReader):
+    """A read that takes longer than the idle budget (like NVML on a busy
+    box) — sleep-after-read scheduling would halve the achieved rate."""
+
+    def read_watts(self):
+        time.sleep(0.03)
+        return [42.0]
+
+
+def test_power_monitor_absolute_deadline_rate():
+    with energy_lib.PowerMonitor(_SlowReader(), interval_s=0.05) as mon:
+        time.sleep(0.5)
+    res = mon.result()
+    # deadline scheduling: read latency eats the idle wait, not the
+    # cadence.  The drifting sampler achieved ~1/(0.05+0.03) = 12.5 Hz;
+    # the deadline sampler holds ~20 Hz.
+    assert res.samples_per_sec >= 0.7 / 0.05
+    assert res.dropped_reads == 0
+
+
 def test_procstat_reader_runs():
     r = energy_lib.ProcStatReader(idle_watts=10, tdp_watts=65)
     w = r.read_watts()

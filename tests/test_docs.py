@@ -26,7 +26,8 @@ _FLAG = re.compile(r"(?<![\w-])--[a-z][a-z0-9-]*")
 # what rot right after entry-point names).  Modules with subcommands
 # (repro.cli) are exempt — their top-level --help doesn't list subcommand
 # flags.
-_FLAG_CHECKED_MODULES = ("repro.launch.serve", "benchmarks.run")
+_FLAG_CHECKED_MODULES = ("repro.launch.serve", "repro.launch.bench_serve",
+                         "benchmarks.run")
 
 
 def _help_commands():

@@ -366,6 +366,57 @@ def test_speculative_invariants(seed, k, n, spec_on):
     assert eng.blocks_in_use == 0
 
 
+# -- energy: the step-function integral is additive over tiled windows ----------
+
+def _sample_train(rng, n):
+    """Jittered sample cadence with 1-2 devices, like a real flaky sampler."""
+    ts = np.cumsum(rng.uniform(1e-4, 0.3, n))
+    return [(float(t),
+             [float(w) for w in rng.uniform(0.0, 120.0, rng.integers(1, 3))])
+            for t in ts]
+
+
+@given(n=st.integers(1, 30), cuts=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_energy_tiling_conserves(n, cuts, seed):
+    """For arbitrary jittered sample trains and arbitrary window cuts,
+    tiling [t0, t1] with sub-windows reproduces integrate_joules(t0, t1)
+    — the invariant per-request energy attribution stands on."""
+    from repro.core.energy import integrate_joules
+
+    rng = np.random.default_rng(seed)
+    samples = _sample_train(rng, n)
+    span = samples[-1][0]
+    # windows deliberately overhang the sample train on both sides
+    t0 = float(rng.uniform(-0.5, span))
+    t1 = t0 + float(rng.uniform(1e-6, span - t0 + 0.5))
+    edges = [t0] + sorted(float(e) for e in rng.uniform(t0, t1, cuts)) + [t1]
+    total = integrate_joules(samples, t0, t1)
+    tiled = sum(integrate_joules(samples, a, b)
+                for a, b in zip(edges, edges[1:]))
+    assert tiled == pytest.approx(total, rel=1e-9, abs=1e-12)
+
+
+@given(n=st.integers(1, 30), seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_energy_result_shares_ledger_with_joules_between(n, seed):
+    """result().joules and joules_between(*window) are the same integral
+    — run-level and per-request accounting can never drift apart."""
+    from repro.core.energy import PowerMonitor, SyntheticReader
+
+    rng = np.random.default_rng(seed)
+    mon = PowerMonitor(SyntheticReader(lambda t: 0.0))
+    mon._samples = _sample_train(rng, n)
+    span = mon._samples[-1][0]
+    mon._t0 = float(rng.uniform(-0.5, span))
+    mon._t1 = mon._t0 + float(rng.uniform(1e-6, span - mon._t0 + 0.5))
+    res = mon.result()
+    assert res.joules == mon.joules_between(mon._t0, mon._t1)
+    assert res.avg_watts * res.duration_s == pytest.approx(
+        res.joules, rel=1e-9, abs=1e-12)
+
+
 # -- checkpoint: roundtrip arbitrary nested trees -------------------------------
 
 @given(seed=st.integers(0, 2**16), depth=st.integers(1, 3))
