@@ -14,8 +14,8 @@ import time
 from typing import List
 
 from benchmarks import (kernel_bench, measured_cpu, roofline, serving_bench,
-                        speculative_bench, table2_size, table3_latency_energy,
-                        table4_jetson, trace_demo)
+                        sharded_bench, speculative_bench, table2_size,
+                        table3_latency_energy, table4_jetson, trace_demo)
 
 MODULES = {
     "table2": table2_size,            # paper Table 2
@@ -26,6 +26,7 @@ MODULES = {
     "kernels": kernel_bench,          # Pallas kernel reference timings
     "serving": serving_bench,         # fused vs per-slot decode loop
     "speculative": speculative_bench,  # prompt-lookup drafting vs plain decode
+    "sharded": sharded_bench,         # tp=2 vs tp=1 sharding equivalence
     "roofline": roofline,             # assignment §Roofline (from dry-run JSONs)
 }
 

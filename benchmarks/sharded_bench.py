@@ -1,0 +1,25 @@
+"""Tensor-parallel sharded-serving benchmark entry point.
+
+The section itself lives in ``serving_bench`` (it shares that module's
+engine/workload plumbing); this thin module gives it its own harness key
+so the bench-smoke CI leg can run just the sharded row under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — the full
+serving suite runs on the default single-device host, where the section
+skips itself.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from benchmarks import serving_bench
+from repro.configs import get_config
+from repro.models import model as model_lib
+
+
+def run(csv_rows: List[str]) -> str:
+    cfg = get_config(serving_bench.ARCH, smoke=True)
+    params, axes = model_lib.init(cfg, jax.random.PRNGKey(0))
+    return serving_bench._sharded_section(cfg, params, axes, csv_rows)

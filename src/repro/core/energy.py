@@ -268,6 +268,116 @@ class PowerMonitor:
         )
 
 
+class DeviceMonitorGroup:
+    """One ``PowerMonitor`` per device under a single measurement window.
+
+    The paper sums multi-GPU powers; this keeps the per-device ledgers
+    intact instead of summing at the reader.  The group quacks like a
+    ``PowerMonitor`` where the serving engine needs it (``window`` /
+    ``joules_between`` / ``result`` / ``dropped_reads``) and adds the
+    per-device split: ``joules_between_by_device`` for request-windowed
+    tilings and ``result_by_device`` for run totals.  Every integral — per
+    device, per window, aggregate — is the same step function, so
+
+        sum_d integrate_d(t0, t1)  ==  group.joules_between(t0, t1)
+        sum_d result_by_device()[d].joules  ==  result().joules
+
+    and tiling the run window with request sub-windows reproduces the
+    aggregate, exactly as in the single-monitor ledger.
+
+    A device whose reader drops every read degrades gracefully: it
+    contributes 0 J (no samples means no steps to integrate), its drops are
+    counted in the aggregate ``dropped_reads``, and the other devices'
+    ledgers are untouched.
+    """
+
+    def __init__(self, readers: Sequence[PowerReader], interval_s: float = 0.1):
+        assert readers, "DeviceMonitorGroup needs at least one reader"
+        self.monitors = [PowerMonitor(r, interval_s) for r in readers]
+        self.interval_s = interval_s
+        self._t0 = 0.0
+        self._t1 = 0.0
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.monitors)
+
+    @property
+    def dropped_reads(self) -> int:
+        return sum(m.dropped_reads for m in self.monitors)
+
+    def __enter__(self) -> "DeviceMonitorGroup":
+        # one clock for the group window; the per-device monitors stamp
+        # their own t0 microseconds later, and their first synchronous
+        # sample extends backwards over the gap (step-function semantics)
+        self._t0 = time.perf_counter()
+        self._t1 = 0.0
+        for m in self.monitors:
+            m.__enter__()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._t1 = time.perf_counter()
+        for m in self.monitors:
+            m.__exit__(*exc)
+
+    @property
+    def window(self) -> Tuple[float, float]:
+        """(enter, exit) perf_counter stamps (exit == now while running)."""
+        t1 = self._t1 if self._t1 > self._t0 else time.perf_counter()
+        return self._t0, t1
+
+    def joules_between(self, t0: float, t1: float) -> float:
+        """Aggregate step-function energy over [t0, t1] (additive)."""
+        return sum(self.joules_between_by_device(t0, t1))
+
+    def joules_between_by_device(self, t0: float, t1: float) -> List[float]:
+        return [m.joules_between(t0, t1) for m in self.monitors]
+
+    def result_by_device(self) -> List[EnergyResult]:
+        """Per-device results over the *group* window, so their joules sum
+        exactly to ``result().joules``."""
+        t0, t1 = self.window
+        duration = max(t1 - t0, 1e-9)
+        out = []
+        for m in self.monitors:
+            window = [(t, w) for t, w in m._samples if t0 <= t <= t1 + 1e-3]
+            if not window:
+                window = m._samples[-1:] or [(t0, [0.0])]
+            joules = integrate_joules(m._samples, t0, t1)
+            out.append(EnergyResult(
+                duration_s=duration,
+                avg_watts=joules / duration,
+                joules=joules,
+                samples=window,
+                n_devices=max(len(w) for _, w in window),
+                samples_per_sec=len(m._samples) / duration,
+                dropped_reads=m.dropped_reads,
+            ))
+        return out
+
+    def result(self) -> EnergyResult:
+        per = self.result_by_device()
+        duration = per[0].duration_s
+        joules = sum(r.joules for r in per)
+        # interleaved per-device samples, sorted by time — for inspection
+        # only; the integrable ledgers live in the per-device monitors
+        samples = sorted((s for m in self.monitors for s in m._samples),
+                         key=lambda tw: tw[0])
+        return EnergyResult(
+            duration_s=duration,
+            avg_watts=joules / duration,
+            joules=joules,
+            samples=samples,
+            n_devices=len(self.monitors),
+            # mean per-device achieved rate: one dead device lowers the
+            # aggregate instead of zeroing it (its own rate is visible in
+            # result_by_device)
+            samples_per_sec=len(samples) / duration / len(self.monitors),
+            dropped_reads=self.dropped_reads,
+        )
+
+
 def measure_energy(
     fn: Callable[[], object], reader: PowerReader, interval_s: float = 0.1
 ) -> EnergyResult:

@@ -116,6 +116,16 @@ def serving_throughput_rows(summary: Dict) -> List[Dict]:
                      "value": round(summary["dispatches_per_step_p50"], 2)})
         rows.append({"Metric": "dispatches/step p95",
                      "value": round(summary["dispatches_per_step_p95"], 2)})
+    # per-device splits from a --tp run: list values render as a / b / c
+    for key, label, fmt in (
+            ("joules_per_device", "J by device", "{:.2f}"),
+            ("kv_bytes_peak_per_device", "KV peak bytes by device", "{:d}"),
+            ("pool_blocks_in_use_per_device", "pool blocks by device", "{:d}"),
+            ("power_samples_per_sec_per_device",
+             "power sample rate by device (Hz)", "{:.1f}")):
+        if key in summary:
+            rows.append({"Metric": label, "value": " / ".join(
+                fmt.format(v) for v in summary[key])})
     return rows
 
 

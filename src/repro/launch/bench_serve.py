@@ -28,9 +28,9 @@ import jax
 
 from repro.configs import get_config
 from repro.core import report
-from repro.core.energy import (ModelReader, PowerMonitor, ProcStatReader,
-                               SyntheticReader)
-from repro.launch.mesh import make_host_mesh
+from repro.core.energy import (DeviceMonitorGroup, ModelReader, PowerMonitor,
+                               ProcStatReader, SyntheticReader)
+from repro.launch.mesh import make_host_mesh, make_tp_mesh
 from repro.models import model as model_lib
 from repro.serving.engine import ServingEngine
 from repro.serving.loadgen import LoadSpec, prewarm_engine, run_load
@@ -117,17 +117,33 @@ def main(argv=None) -> int:
                          "tiling, achieved sampler rate")
     ap.add_argument("--ttft-tolerance-ms", type=float, default=250.0,
                     help="--check bound on mean client-minus-engine TTFT")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel devices: shard the served model "
+                         "over a (tp,) mesh with one power monitor per "
+                         "device (streams stay byte-identical to --tp 1; "
+                         "on CPU force a multi-device host with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    reader = _make_reader(args.power_reader)
-    monitor = (PowerMonitor(reader, interval_s=args.power_interval)
-               if reader is not None else None)
+    if args.power_reader == "none":
+        monitor = None
+    elif args.tp > 1:
+        monitor = DeviceMonitorGroup(
+            [_make_reader(args.power_reader) for _ in range(args.tp)],
+            interval_s=args.power_interval)
+    else:
+        monitor = PowerMonitor(_make_reader(args.power_reader),
+                               interval_s=args.power_interval)
 
-    with rules.use_mesh(make_host_mesh()):
-        params, _ = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
+    tp_mesh = make_tp_mesh(args.tp) if args.tp > 1 else None
+    with rules.use_mesh(make_host_mesh() if tp_mesh is None else None):
+        params, param_axes = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
         engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                                max_len=args.max_len, seed=args.seed,
+                               mesh=tp_mesh,
+                               param_axes=(param_axes if tp_mesh is not None
+                                           else None),
                                prefill_chunk=args.prefill_chunk)
         if monitor is not None:
             engine.attach_monitor(monitor)

@@ -22,3 +22,24 @@ def make_host_mesh():
     """Whatever devices exist, as a 1D (data,) mesh — CPU smoke runs."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+def make_tp_mesh(tp: int):
+    """First ``tp`` local devices as a 1D (tp,) tensor-parallel mesh.
+
+    The serving engine shards heads/FFN over this axis (rules.TP_SERVE_RULES)
+    while slot state stays replicated.  On CPU, force a multi-device host
+    with XLA_FLAGS=--xla_force_host_platform_device_count=N before importing
+    jax.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if tp < 1:
+        raise ValueError(f"--tp must be >= 1, got {tp}")
+    if tp > len(devices):
+        raise ValueError(
+            f"--tp {tp} exceeds the {len(devices)} visible device(s); on CPU "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    return Mesh(np.asarray(devices[:tp]), ("tp",))

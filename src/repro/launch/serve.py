@@ -23,9 +23,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import report
-from repro.core.energy import (ModelReader, PowerMonitor, ProcStatReader,
-                               SyntheticReader)
-from repro.launch.mesh import make_host_mesh
+from repro.core.energy import (DeviceMonitorGroup, ModelReader, PowerMonitor,
+                               ProcStatReader, SyntheticReader)
+from repro.launch.mesh import make_host_mesh, make_tp_mesh
 from repro.models import model as model_lib
 from repro.serving.engine import ServingEngine
 from repro.models import cache as cache_lib
@@ -44,6 +44,18 @@ def _make_reader(kind: str):
     if kind == "synthetic":
         return SyntheticReader(lambda t: 42.0)
     return None
+
+
+def _make_monitor(kind: str, n_devices: int):
+    """One PowerMonitor, or — under --tp — a per-device monitor group whose
+    windowed joules tile exactly to the aggregate (on CPU each per-device
+    reader is a proxy; real NVML/jtop readers bind one device each)."""
+    if kind == "none":
+        return None
+    if n_devices > 1:
+        return DeviceMonitorGroup([_make_reader(kind)
+                                   for _ in range(n_devices)])
+    return PowerMonitor(_make_reader(kind))
 
 
 def _parse_replay(text: str):
@@ -181,6 +193,14 @@ def main(argv=None) -> int:
                     help="requests per wave of the --bursty trace")
     ap.add_argument("--burst-gap", type=float, default=0.25,
                     help="seconds between --bursty waves")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel devices: shard heads/FFN over a "
+                         "(tp,) mesh inside the fused engine step, with "
+                         "per-device KV shards and per-device power "
+                         "monitors (token streams stay byte-identical to "
+                         "--tp 1; on CPU force a multi-device host with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N)")
     args = ap.parse_args(argv)
     if args.prefix_cache and args.cache_layout != "paged":
         ap.error("--prefix-cache requires --cache-layout paged")
@@ -253,11 +273,17 @@ def main(argv=None) -> int:
               f"(worst case {worst}); pair with --preemption recompute "
               f"to survive a bursty tail")
 
-    reader = _make_reader(args.power_reader)
-    with rules.use_mesh(make_host_mesh()):
-        params, _ = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
+    monitor = _make_monitor(args.power_reader, args.tp)
+    # --tp > 1: the engine owns its (tp,) mesh (entered around every
+    # trace/dispatch), so the ambient host data-mesh stays out of the way
+    tp_mesh = make_tp_mesh(args.tp) if args.tp > 1 else None
+    with rules.use_mesh(make_host_mesh() if tp_mesh is None else None):
+        params, param_axes = model_lib.init(cfg, jax.random.PRNGKey(args.seed))
         engine = ServingEngine(cfg, params, max_batch=args.max_batch,
                                max_len=args.max_len, seed=args.seed,
+                               mesh=tp_mesh,
+                               param_axes=(param_axes if tp_mesh is not None
+                                           else None),
                                cache_layout=args.cache_layout,
                                kv_block_size=args.kv_block_size,
                                kv_num_blocks=kv_num_blocks,
@@ -272,9 +298,7 @@ def main(argv=None) -> int:
         if args.http_port:
             from repro.serving.server import start_http_server
 
-            monitor = None
-            if reader is not None:
-                monitor = PowerMonitor(reader)
+            if monitor is not None:
                 engine.attach_monitor(monitor)
                 monitor.__enter__()
             handle = start_http_server(engine, host=args.http_host,
@@ -296,8 +320,7 @@ def main(argv=None) -> int:
             print(report.to_markdown(report.serving_summary_rows(summary)))
             return 0
         driver = OpenLoopDriver(engine, arrivals)
-        if reader is not None:
-            monitor = PowerMonitor(reader)
+        if monitor is not None:
             engine.attach_monitor(monitor)
             with monitor:
                 finished = driver.run()

@@ -158,6 +158,26 @@ class BlockPool:
         """Blocks owned by live requests (excludes free and cached-idle)."""
         return max(self.num_blocks - 1, 0) - self.available
 
+    def shard_accounting(self, n_devices: int) -> List[Dict[str, int]]:
+        """Per-device block accounting for a tensor-parallel sharded pool.
+
+        The pool shards the KV *feature* dims (heads x head_dim), never the
+        block axis: every device holds its head-shard of every block, and the
+        host-managed block tables index each device's pool identically.  So
+        device ``d``'s pool mirrors the logical partition exactly — a block
+        live for request ``r`` is live for ``r`` on every device (no
+        cross-device aliasing), and ``free + in_use + evictable`` tiles the
+        allocatable blocks ``1..num_blocks-1`` on each shard.
+        """
+        assert n_devices >= 1, n_devices
+        allocatable = max(self.num_blocks - 1, 0)
+        free = len(self.free_stack)
+        evictable = len(self.evictable)
+        in_use = allocatable - free - evictable
+        view = {"free": free, "in_use": in_use, "evictable": evictable,
+                "allocatable": allocatable}
+        return [dict(view) for _ in range(n_devices)]
+
     def allocate(self, n: int) -> List[int]:
         """Pop ``n`` blocks, evicting LRU cached blocks under pressure."""
         assert n <= self.available, (

@@ -35,6 +35,8 @@ from repro.core.energy import PowerMonitor
 from repro.models import cache as cache_lib
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
+from repro.sharding import partition as partition_lib
+from repro.sharding import rules as rules_lib
 from repro.serving.sampling import SamplingParams, sample
 from repro.serving.step import (init_slot_state, invalidate_slot,
                                 make_decode_sample_step, make_engine_step,
@@ -170,6 +172,9 @@ class ServingEngine:
         pad_side: str = "left",
         speculative: str = "off",
         spec_tokens: int = 4,
+        mesh=None,
+        shard_rules=None,
+        param_axes=None,
     ):
         assert cache_layout in ("contiguous", "paged"), cache_layout
         assert preemption in ("off", "recompute"), preemption
@@ -228,6 +233,19 @@ class ServingEngine:
                     f"({', '.join(bad) or 'cross-attention/vision prefix'})")
         self.prefix_cache = prefix_cache
         self.cfg = cfg
+        # tensor-parallel serving: an engine-owned mesh makes every jitted
+        # trace/dispatch run under ``use_mesh`` (see ``_counted``), so the
+        # model code's logical-axis ``shard`` constraints resolve against
+        # it.  Heads/FFN shard over the ``tp`` axis; slot state replicates,
+        # keeping the packed per-step host sync one transfer.
+        self._mesh = mesh
+        self._rules = shard_rules if shard_rules is not None else (
+            rules_lib.TP_SERVE_RULES if mesh is not None else None)
+        if mesh is not None and param_axes is not None:
+            params = jax.device_put(params, partition_lib.param_shardings(
+                param_axes, params, mesh, self._rules))
+        elif mesh is not None:
+            params = jax.device_put(params, partition_lib.replicated(mesh))
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
@@ -316,6 +334,12 @@ class ServingEngine:
         self.cache = model_lib.init_cache(
             cfg, max_batch, max_len, dtype, layout=cache_layout,
             block_size=kv_block_size, num_blocks=self.num_blocks)
+        if mesh is not None:
+            # KV shards live on their device: heads-sharded pool/cache rows
+            # (block axes never shard — the host-managed tables index every
+            # device's pool identically)
+            self.cache = jax.device_put(
+                self.cache, partition_lib.cache_shardings(self.cache, mesh))
         self.slots: List[Optional[Request]] = [None] * max_batch
         # chunked-prefill cursors: _cursors[s] is set while slot s is in the
         # *prefilling* state; _prefill_order is the FCFS service order
@@ -333,6 +357,11 @@ class ServingEngine:
             max_batch, seed=seed + 1,
             max_blocks=self.max_blocks_per_slot if cache_layout == "paged" else 0,
             spec_k=self.spec_k)
+        if mesh is not None:
+            # per-slot sampling/PRNG state replicates across the mesh so the
+            # packed host sync stays a single fully-replicated transfer
+            self._state = jax.device_put(
+                self._state, partition_lib.replicated(mesh))
         if self.spec_k:
             self._step = self._counted(maybe_donate(
                 make_spec_decode_step(cfg, max_len, k_max=self.top_k_max,
@@ -414,10 +443,15 @@ class ServingEngine:
         self.stream_hook: Optional[Callable[[int, List[int], bool], None]] = None
 
     def _counted(self, fn):
-        """Wrap a jitted callable so every launch bumps ``_dispatches``."""
+        """Wrap a jitted callable so every launch bumps ``_dispatches`` —
+        and, on a tensor-parallel engine, runs under the engine's mesh so
+        both tracing and replay see the sharding rules."""
 
         def run(*args):
             self._dispatches += 1
+            if self._mesh is not None:
+                with rules_lib.use_mesh(self._mesh, self._rules):
+                    return fn(*args)
             return fn(*args)
 
         return run
@@ -1460,6 +1494,61 @@ class ServingEngine:
         cfg = self.cfg
         return 2 * cfg.num_kv_heads * cfg.resolved_head_dim * self._dtype.itemsize
 
+    @property
+    def n_devices(self) -> int:
+        """Mesh devices the engine shards over (1 without a mesh)."""
+        if self._mesh is None:
+            return 1
+        return int(np.prod(list(self._mesh.shape.values())))
+
+    def kv_bytes_by_device(self, peak: bool = False) -> List[int]:
+        """Physically resident attention-KV bytes per mesh device.
+
+        Computed from the live cache leaves' actual shard shapes, so it
+        reports what each device truly holds: when the KV heads dim shards
+        over ``tp`` the per-device values sum exactly to
+        ``kv_bytes_in_use``; a leaf whose heads don't divide the axis is
+        replicated, and then every device carries its full copy (the sum
+        exceeds the logical aggregate by design — replication is real
+        memory).  Scope matches the aggregate: paged pool leaves
+        (``kp``/``vp``) scaled by blocks in use (or the high-water mark
+        with ``peak=True``); contiguous ``k``/``v`` stripes whole.
+        """
+        if self._mesh is None:
+            return [self.kv_bytes_in_use(peak)]
+        devices = list(self._mesh.devices.flat)
+        per = {d.id: 0 for d in devices}
+        blocks = self.peak_blocks_in_use if peak else self.blocks_in_use
+
+        def visit(path, leaf):
+            name = str(getattr(path[-1], "key",
+                               getattr(path[-1], "idx", path[-1])))
+            itemsize = jnp.dtype(leaf.dtype).itemsize
+            if self.layout == "paged":
+                if name not in ("kp", "vp"):
+                    return
+                for sh in leaf.addressable_shards:
+                    if sh.device.id in per:
+                        # the block axis never shards: each device holds
+                        # size/num_blocks elements per block of this leaf
+                        per[sh.device.id] += (
+                            sh.data.size // self.num_blocks) * blocks * itemsize
+            else:
+                if name not in ("k", "v"):
+                    return
+                for sh in leaf.addressable_shards:
+                    if sh.device.id in per:
+                        per[sh.device.id] += sh.data.size * itemsize
+
+        jax.tree_util.tree_map_with_path(visit, self.cache)
+        return [per[d.id] for d in devices]
+
+    def pool_accounting_by_device(self) -> List[Dict[str, int]]:
+        """Per-device block accounting (see ``BlockPool.shard_accounting``):
+        block tables are host-managed and shared, so each device's pool
+        holds the same free/in-use/evictable partition of its KV shard."""
+        return self._pool.shard_accounting(self.n_devices)
+
     # -- energy attribution ------------------------------------------------------
     def _count_token(self, req: Request) -> None:
         if self.monitor is None:
@@ -1524,6 +1613,13 @@ class ServingEngine:
                 summary[f"{name}_p{q}_ms"] = _percentile(xs, q) * 1e3
         summary["kv_bytes_peak"] = self.kv_bytes_in_use(peak=True)
         summary["kv_bytes_worst_case"] = self.kv_bytes_worst_case
+        if self._mesh is not None:
+            summary["tp_devices"] = self.n_devices
+            summary["kv_bytes_peak_per_device"] = self.kv_bytes_by_device(
+                peak=True)
+            if self.layout == "paged":
+                summary["pool_blocks_in_use_per_device"] = [
+                    v["in_use"] for v in self.pool_accounting_by_device()]
         if self._steps_done:
             wall = max(self._steps_t1 - (self._steps_t0 or 0.0), 1e-9)
             summary["steps_per_sec"] = self._steps_done / wall
@@ -1567,4 +1663,18 @@ class ServingEngine:
             res = self.monitor.result()
             summary["power_samples_per_sec"] = res.samples_per_sec
             summary["power_reads_dropped"] = res.dropped_reads
+            # per-device split when the monitor keeps per-device ledgers
+            # (DeviceMonitorGroup): each device's windowed integral over
+            # the group window, so the list sums to result().joules — a
+            # device that dropped every read contributes 0.0 J and its
+            # drop count, never a crash
+            by_dev = getattr(self.monitor, "result_by_device", None)
+            if callable(by_dev):
+                dev_results = by_dev()
+                summary["joules_per_device"] = [
+                    r.joules for r in dev_results]
+                summary["power_samples_per_sec_per_device"] = [
+                    r.samples_per_sec for r in dev_results]
+                summary["power_reads_dropped_per_device"] = [
+                    r.dropped_reads for r in dev_results]
         return summary

@@ -76,8 +76,14 @@ def cache_shardings(cache_shapes, mesh: Mesh):
 
     Leaves under ``groups`` are scan-stacked — batch sits at axis 1; under
     ``rest`` it is axis 0.  Uneven batch dims fall back to replication.
-    Heads dims inside the cache stay replicated across `model` by default —
-    the serve-path hillclimb (EXPERIMENTS §Perf) revisits this.
+
+    On a tensor-parallel serving mesh (axis ``tp``) KV heads shard over the
+    tp axis — including the paged pool leaves ``kp``/``vp``, whose *block*
+    axis is never sharded (block tables are host-managed and index every
+    device's pool identically; each device holds its head-shard of every
+    block).  On the training mesh, heads dims stay replicated across
+    ``model`` by default — the serve-path hillclimb (EXPERIMENTS §Perf)
+    revisits this.
     """
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     data_axes = axes if len(axes) > 1 else (axes[0] if axes else None)
@@ -85,7 +91,8 @@ def cache_shardings(cache_shapes, mesh: Mesh):
     for a in axes:
         dp *= mesh.shape[a]
 
-    model_size = mesh.shape.get("model", 1)
+    mp_name = "model" if "model" in mesh.axis_names else "tp"
+    model_size = mesh.shape.get(mp_name, 1)
     has_model = model_size > 1
 
     def leaf(path, s):
@@ -102,14 +109,16 @@ def cache_shardings(cache_shapes, mesh: Mesh):
             for i in idxs:
                 if 0 <= i < nd and spec[i] is None and \
                         s.shape[i] % model_size == 0 and s.shape[i] >= model_size:
-                    spec[i] = "model"
+                    spec[i] = mp_name
                     return
 
         # model-parallel dim: kv heads when they divide, else the KV length
         # (sequence-parallel cache — flash-decoding-style partial softmax);
         # recurrent heads, else the state feature dim
         if has_model:
-            if name in ("k", "v", "cross_k", "cross_v") and nd >= b_axis + 4:
+            if name in ("kp", "vp") and nd >= 4:
+                try_model(nd - 2)                  # pool heads only, never blocks
+            elif name in ("k", "v", "cross_k", "cross_v") and nd >= b_axis + 4:
                 try_model(nd - 2, b_axis + 1)      # H, else L
             elif name == "pos" and nd == b_axis + 2:
                 pass                               # must mirror k/v L-sharding? kept replicated

@@ -67,6 +67,26 @@ SERVE_RULES: Dict[str, MeshAxes] = {
 }
 
 
+def _retag(rules: Dict[str, MeshAxes], old: str, new: str) -> Dict[str, MeshAxes]:
+    """Rule set with every reference to physical axis ``old`` renamed ``new``."""
+    def sub(spec: MeshAxes) -> MeshAxes:
+        if spec == old:
+            return new
+        if isinstance(spec, tuple):
+            return tuple(new if a == old else a for a in spec)
+        return spec
+    return {k: sub(v) for k, v in rules.items()}
+
+
+# Tensor-parallel serving rules for a single-axis ("tp",) mesh: heads, FFN
+# hidden, experts, and the output vocab shard over ``tp``; everything mapped
+# to axes the mesh lacks ("pod"/"data"/"model") degrades to replication via
+# ``_physical_axes``.  In particular the batch/slot dims and the sampling
+# PRNG state stay replicated, so the engine's packed host sync is still one
+# transfer of a fully-replicated array.
+TP_SERVE_RULES: Dict[str, MeshAxes] = _retag(SERVE_RULES, "model", "tp")
+
+
 class _State(threading.local):
     def __init__(self):
         self.mesh: Optional[Mesh] = None

@@ -99,6 +99,23 @@ def _module_help(mod):
     return proc.stdout
 
 
+def test_serving_doc_covers_multi_device():
+    """docs/serving.md documents the tensor-parallel path with live
+    snippets: a --tp invocation under the forced-host XLA_FLAGS (those
+    flags go through the snippet-flag check above) and the per-device
+    summary keys the glossary promises."""
+    text = (ROOT / "docs" / "serving.md").read_text()
+    tp_snippets = [block for block in _BASH_BLOCK.findall(text)
+                   if "--tp" in block]
+    assert tp_snippets, "docs/serving.md has no fenced --tp snippet"
+    assert any("xla_force_host_platform_device_count" in b
+               for b in tp_snippets), (
+        "the --tp snippets never show how to force a multi-device host")
+    for key in ("joules_per_device", "kv_bytes_peak_per_device",
+                "DeviceMonitorGroup"):
+        assert key in text, f"docs/serving.md stopped mentioning {key}"
+
+
 def test_doc_snippet_flags_are_registered():
     """Every --flag a doc snippet passes to an allowlisted entry point
     exists in that entry point's --help (catches flags renamed or removed

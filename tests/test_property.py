@@ -417,6 +417,90 @@ def test_energy_result_shares_ledger_with_joules_between(n, seed):
         res.joules, rel=1e-9, abs=1e-12)
 
 
+# -- sharded serving: per-device pool + energy ledgers --------------------------
+
+@pytest.mark.sharded
+@given(
+    seed=st.integers(0, 2**16),
+    ndev=st.sampled_from([1, 2, 4]),
+    chunk=st.sampled_from([0, 4, 8]),
+    n=st.integers(2, 5),
+)
+@settings(max_examples=6, deadline=None)
+def test_sharded_pool_accounting_partitions(seed, ndev, chunk, n):
+    """Random Poisson workloads: per-device block accounting mirrors the
+    global pool on every shard — free + in_use + evictable tiles the
+    allocatable blocks, and every device reports the identical partition
+    (the pool shards KV features, never blocks, so a block live on one
+    device is live on all: no cross-device aliasing).  Host bookkeeping
+    only — needs no multi-device host."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.workload import LengthDist, WorkloadSpec, poisson_trace
+
+    cfg, params = _serve_model()
+    spec = WorkloadSpec(
+        arrival_rate=0.0, num_requests=n,
+        prompt_len=LengthDist(kind="uniform", low=2, high=40),
+        output_len=LengthDist(kind="uniform", low=1, high=10),
+        temperature=0.7, top_k=8, seed=seed,
+    )
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=64,
+                        prompt_bucket=8, cache_layout="paged",
+                        kv_block_size=8, prefill_chunk=chunk, seed=seed)
+    for a in poisson_trace(spec, cfg.vocab_size):
+        eng.submit(a.prompt, a.params)
+    pool = eng._pool
+    while eng.busy:
+        eng.step()
+        views = pool.shard_accounting(ndev)
+        assert len(views) == ndev
+        assert len({(v["free"], v["in_use"], v["evictable"])
+                    for v in views}) == 1
+        for v in views:
+            assert v["free"] == len(pool.free_stack)
+            assert v["evictable"] == len(pool.evictable)
+            assert v["in_use"] == pool.in_use
+            assert (v["free"] + v["in_use"] + v["evictable"]
+                    == v["allocatable"] == max(pool.num_blocks - 1, 0))
+    eng.flush()
+    # drained: every shard's pool is all free/evictable again
+    for v in pool.shard_accounting(ndev):
+        assert v["in_use"] == 0
+
+
+@pytest.mark.sharded
+@given(ndev=st.integers(1, 4), n=st.integers(1, 30), cuts=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+@settings(**SETTINGS)
+def test_device_group_energy_tilings_sum_to_aggregate(ndev, n, cuts, seed):
+    """For arbitrary jittered per-device sample trains and arbitrary
+    request-window cuts: per-device totals sum exactly to the aggregate
+    ``result().joules``, and tiling the run window — aggregate or per
+    device — reproduces the same ledger."""
+    from repro.core.energy import DeviceMonitorGroup, SyntheticReader
+
+    rng = np.random.default_rng(seed)
+    group = DeviceMonitorGroup(
+        [SyntheticReader(lambda t: 0.0) for _ in range(ndev)])
+    for m in group.monitors:
+        m._samples = _sample_train(rng, n)
+    span = max(m._samples[-1][0] for m in group.monitors)
+    group._t0 = float(rng.uniform(-0.5, span))
+    group._t1 = group._t0 + float(rng.uniform(1e-6, span - group._t0 + 0.5))
+    t0, t1 = group.window
+
+    per = group.result_by_device()
+    total = group.result().joules
+    assert sum(r.joules for r in per) == total  # same sums, same order
+    edges = [t0] + sorted(float(e) for e in rng.uniform(t0, t1, cuts)) + [t1]
+    tiled = sum(group.joules_between(a, b) for a, b in zip(edges, edges[1:]))
+    assert tiled == pytest.approx(total, rel=1e-9, abs=1e-12)
+    for d, r in enumerate(per):
+        dev_tiled = sum(group.joules_between_by_device(a, b)[d]
+                        for a, b in zip(edges, edges[1:]))
+        assert dev_tiled == pytest.approx(r.joules, rel=1e-9, abs=1e-12)
+
+
 # -- checkpoint: roundtrip arbitrary nested trees -------------------------------
 
 @given(seed=st.integers(0, 2**16), depth=st.integers(1, 3))
